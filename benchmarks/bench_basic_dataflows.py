@@ -1,0 +1,46 @@
+"""Paper Fig. 2: relative latency of the basic dataflows (IS/WS/OS).
+
+derived = traffic-model latency ratio vs OS at the paper's layer scale
+(median over the layer grid reproduces the paper's 1.93x/3.41x s=1 and
+5.39x/2.81x s=2 ordering qualitatively); us_per_call = interpret-mode
+wall-clock of the matmul kernel on a reduced layer.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER_LAYERS, emit, time_fn
+from repro.core import cost_model
+from repro.core.dataflow import ConvProblem, DataflowSpec, IS, OS, WS
+from repro.kernels import ops
+
+
+def run() -> None:
+    ratios = {IS: [], WS: []}
+    for hw, f, s, nf in PAPER_LAYERS:
+        conv = ConvProblem(ih=hw, iw=hw, fh=f, fw=f, s=s, cin=128, cout=nf)
+        g = conv.as_gemm()
+        t = {a: cost_model.gemm_time_estimate(g, DataflowSpec.basic(a))
+             for a in (OS, WS, IS)}
+        for a in (IS, WS):
+            ratios[a].append(t[a] / t[OS])
+
+    # reduced-layer interpret-mode wall clock per anchor
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    for anchor, nm in ((OS, "os"), (IS, "is"), (WS, "ws")):
+        spec = DataflowSpec.basic(anchor, block=(128, 128, 128))
+        us = time_fn(lambda x, y: ops.matmul(x, y, spec=spec,
+                                             backend="interpret"), a, b)
+        if anchor == OS:
+            emit("fig2/basic_os", us, 1.0)
+        else:
+            med = float(np.median(ratios[anchor]))
+            emit(f"fig2/basic_{nm}_vs_os", us, round(med, 2))
+
+    s1 = [r for (hw, f, s, nf), r in zip(PAPER_LAYERS, ratios[IS]) if s == 1]
+    s2 = [r for (hw, f, s, nf), r in zip(PAPER_LAYERS, ratios[IS]) if s == 2]
+    emit("fig2/is_vs_os_median_s1", 0.0, round(float(np.median(s1)), 2))
+    emit("fig2/is_vs_os_median_s2", 0.0, round(float(np.median(s2)), 2))

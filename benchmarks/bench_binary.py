@@ -1,0 +1,61 @@
+"""Paper Fig. 9: binary (1-bit) conv workloads.
+
+The paper reports >12x over bitserial (CGO'20) and up to 4.8x over the
+fp-optimized implementations of [20] on VGG conv layers.  On TPU the
+binary path is xor+popcount on the VPU over 32x-packed channels; we report
+
+  derived     — bytes-moved ratio (binary packed vs int8 vs bf16) for the
+                VGG conv layers — the data-movement component of the
+                paper's speedup (weights+inputs shrink 8x vs int8);
+  us_per_call — interpret-mode wall-clock of the binary matmul kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import cost_model
+from repro.core.dataflow import ConvProblem
+from repro.core.explorer import best_spec
+from repro.kernels import ops, ref
+
+VGG_LAYERS = [
+    (56, 56, 3, 1, 256, 256),
+    (56, 56, 3, 1, 256, 512),
+    (28, 28, 3, 1, 512, 512),
+    (14, 14, 3, 1, 512, 512),
+]
+
+
+def run() -> None:
+    for ih, iw, f, s, cin, cout in VGG_LAYERS:
+        tot = {}
+        for dt, nm in (("binary_packed", "bin"), ("int8", "i8"),
+                       ("bfloat16", "bf16")):
+            cin_eff = cin // 32 if dt == "binary_packed" else cin
+            conv = ConvProblem(ih=ih, iw=iw, fh=f, fw=f, s=s, cin=cin_eff,
+                               cout=cout, in_dtype=dt, out_dtype="int32")
+            g = conv.as_gemm()
+            t = cost_model.gemm_traffic(g, best_spec(g))
+            tot[nm] = t.total
+        emit(f"fig9/vgg{ih}x{ih}c{cin}_bytes_i8_over_bin", 0.0,
+             round(tot["i8"] / tot["bin"], 2))
+        emit(f"fig9/vgg{ih}x{ih}c{cin}_bytes_bf16_over_bin", 0.0,
+             round(tot["bf16"] / tot["bin"], 2))
+
+    # kernel wall-clock: packed binary vs int8 matmul (reduced layer)
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 512, 256
+    a = jnp.asarray(rng.choice([-1.0, 1.0], (m, k)), jnp.float32)
+    w = jnp.asarray(rng.choice([-1.0, 1.0], (k, n)), jnp.float32)
+    apk, wpk = ref.pack_binary(a, axis=1), ref.pack_binary(w, axis=0)
+    us_bin = time_fn(lambda x, y: ops.binary_matmul(
+        x, y, n_bits=k, backend="interpret"), apk, wpk)
+    ai = a.astype(jnp.int8)
+    wi = w.astype(jnp.int8)
+    us_i8 = time_fn(lambda x, y: ops.matmul(
+        x, y, backend="interpret"), ai, wi)
+    emit("fig9/binary_matmul_interpret", us_bin, 1.0)
+    emit("fig9/int8_matmul_interpret", us_i8,
+         round(us_i8 / max(us_bin, 1e-9), 2))

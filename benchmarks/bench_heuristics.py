@@ -1,0 +1,43 @@
+"""Paper Table I: memory-op reductions per auxiliary vector variable,
+and the Observations 1-5 derived from them (validated on the layer grid).
+
+derived = predicted reduction (memory instructions per aux variable) for
+the canonical 56x56 f3 s1 layer; plus 0/1 flags for each observation
+holding across the whole grid.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_LAYERS, emit
+from repro.core import cost_model
+from repro.core.dataflow import ConvProblem, IS, OS, WS
+
+
+def run() -> None:
+    conv = ConvProblem(ih=56, iw=56, fh=3, fw=3, s=1, cin=128, cout=128)
+    rows = [
+        ("os_aux_input", OS, IS), ("os_aux_weight", OS, WS),
+        ("ws_aux_input", WS, IS), ("ws_aux_output", WS, OS),
+        ("is_aux_weight", IS, WS), ("is_aux_output", IS, OS),
+    ]
+    for name, anchor, aux in rows:
+        r, w = cost_model.table1_reduction(anchor, aux, conv)
+        emit(f"table1/{name}_reads", 0.0, int(r))
+        emit(f"table1/{name}_writes", 0.0, int(w))
+
+    # stride-2 IS rows (the nonlinear regime)
+    conv2 = ConvProblem(ih=56, iw=56, fh=3, fw=3, s=2, cin=128, cout=128)
+    for nv in (1, 2, 4):
+        r, w = cost_model.table1_reduction(IS, OS, conv2, n_aux_vars=nv)
+        emit(f"table1/is_aux_output_s2_var{nv}", 0.0, int(r))
+
+    # observations across the full grid
+    all_hold = {k: True for k in ("obs1_ws_gains_least",
+                                  "obs3_os_aux_symmetric",
+                                  "obs4_is_output_first",
+                                  "obs5_ws_output_first")}
+    for hw, f, s, nf in PAPER_LAYERS:
+        c = ConvProblem(ih=hw, iw=hw, fh=f, fw=f, s=s, cin=128, cout=nf)
+        for k, v in cost_model.paper_observations_hold(c).items():
+            all_hold[k] &= v
+    for k, v in all_hold.items():
+        emit(f"table1/{k}", 0.0, int(v))

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows:
+  us_per_call — measured wall-clock of the interpret-mode kernel (CPU
+                proxy; orders dataflows by data-movement/grid work, not
+                MXU throughput), or of the XLA path where noted;
+  derived     — the analytic quantity the paper's table reports
+                (traffic-model speedup ratio, memory-op reduction, ...),
+                computed for the paper-scale layer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+# The paper's conv layer grid (Sec. V): input sizes, filters, strides, nf.
+PAPER_LAYERS: List[Tuple[int, int, int, int]] = [
+    # (input hw, filter hw, stride, n_filters)
+    (56, 3, 1, 128), (56, 3, 1, 256), (56, 3, 1, 512),
+    (56, 4, 1, 128), (56, 5, 1, 256),
+    (112, 3, 1, 128), (112, 3, 1, 256), (112, 4, 1, 512),
+    (56, 3, 2, 128), (56, 4, 2, 256),
+    (112, 3, 2, 128), (112, 5, 2, 256),
+]
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,69 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the artifacts.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+
+Prints markdown; the committed EXPERIMENTS.md embeds this output.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import bench_roofline
+from repro import configs
+from repro.configs.base import SHAPES
+
+DRYRUN = bench_roofline.DRYRUN
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    rows = [
+        "| arch | shape | kind | mb | lower s | compile s | args+temp "
+        "GiB/dev | HLO flops/dev | collective B/dev | a2a | ag | ar |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(DRYRUN,
+                                              f"*__{mesh_tag}.json"))):
+        r = json.load(open(path))
+        mem = r.get("memory", {})
+        gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2**30
+        d = r.get("derived", {})
+        coll = r.get("collectives", {})
+        kinds = coll.get("by_kind_count", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r.get('microbatches', 1)} | {r['lower_seconds']} | "
+            f"{r.get('compile_seconds', '-')} | {gib:.2f} | "
+            f"{d.get('flops', 0):.3e} | "
+            f"{d.get('collective_bytes', 0):.3e} | "
+            f"{kinds.get('all-to-all', 0)} | {kinds.get('all-gather', 0)} "
+            f"| {kinds.get('all-reduce', 0)} |"
+        )
+    return "\n".join(rows)
+
+
+def skip_table() -> str:
+    rows = ["| arch | shape | reason |", "|---|---|---|"]
+    for a, s, sk, reason in configs.all_cells(include_skipped=True):
+        if sk:
+            rows.append(f"| {a} | {s} | {reason} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print("## Dry-run — single-pod mesh 16x16 (256 chips)\n")
+    print(dryrun_table("16x16"))
+    print("\n## Dry-run — multi-pod mesh 2x16x16 (512 chips)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Skipped cells (per assignment rules)\n")
+    print(skip_table())
+    roof = os.path.join(bench_roofline.RESULTS, "roofline.md")
+    if os.path.exists(roof):
+        print("\n## Roofline (single-pod)\n")
+        print(open(roof).read())
+
+
+if __name__ == "__main__":
+    main()

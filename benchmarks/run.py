@@ -1,0 +1,47 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for
+column semantics).  The roofline table additionally requires dry-run
+artifacts (python -m repro.launch.dryrun --all); it is skipped with a
+note if they are absent.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_basic_dataflows,
+        bench_binary,
+        bench_e2e_int8,
+        bench_extended_dataflows,
+        bench_heuristics,
+        bench_roofline,
+    )
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig2_basic_dataflows", bench_basic_dataflows.run),
+        ("fig7_extended_dataflows", bench_extended_dataflows.run),
+        ("table1_heuristics", bench_heuristics.run),
+        ("fig8_e2e_int8", bench_e2e_int8.run),
+        ("fig9_binary", bench_binary.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Sharded checkpointing: npz payloads + JSON manifest, async save,
+resharding restore.
+
+Layout:
+  <dir>/step_<N>/manifest.json   — step, leaf paths/shapes/dtypes, extras
+  <dir>/step_<N>/arrays.npz      — one entry per pytree leaf
+  <dir>/LATEST                   — atomic pointer to the newest step
+
+Save fetches arrays synchronously (cheap vs a train step) and writes the
+file in a background thread; ``wait()`` joins before the next save so at
+most one write is in flight.  Restore takes target shardings, so state
+can be loaded onto a *different* mesh than it was saved from (elastic
+restart — runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# dtypes np.savez cannot store natively (ml_dtypes): widen to f32 on disk,
+# narrow back on restore using the manifest's logical dtype (bit-exact for
+# bf16 since bf16 -> f32 is a widening).
+_WIDEN = {"bfloat16": np.float32, "float8_e4m3fn": np.float32}
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any],
+             extras: Optional[Dict] = None, blocking: bool = False) -> None:
+        """state: dict of pytrees (e.g. {"params": ..., "opt": ...})."""
+        self.wait()
+        host_state = {
+            name: {k: np.asarray(jax.device_get(v))
+                   for k, v in _flatten(tree).items()}
+            for name, tree in state.items()
+        }
+        treedefs = {
+            name: jax.tree_util.tree_structure(tree)
+            for name, tree in state.items()
+        }
+
+        def _write():
+            d = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = d + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            arrays = {}
+            manifest = {"step": step, "extras": extras or {}, "trees": {}}
+            for name, leaves in host_state.items():
+                manifest["trees"][name] = {
+                    k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in leaves.items()
+                }
+                for k, v in leaves.items():
+                    wide = _WIDEN.get(str(v.dtype))
+                    arrays[f"{name}::{k}"] = v.astype(wide) if wide else v
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=2)
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.rename(tmp, d)
+            latest = os.path.join(self.dir, "LATEST")
+            with open(latest + ".tmp", "w") as f:
+                f.write(os.path.basename(d))
+            os.replace(latest + ".tmp", latest)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.dir) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            name = f.read().strip()
+        return int(name.split("_")[1])
+
+    def restore(self, templates: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None,
+                step: Optional[int] = None):
+        """Load state matching ``templates`` (pytrees of like-structure).
+
+        ``shardings``: optional dict of sharding pytrees; leaves are
+        device_put to them — this is where elastic resharding happens.
+        Returns (step, state dict, extras).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        out = {}
+        for name, tree in templates.items():
+            flat_keys = list(_flatten(tree).keys())
+            leaves = []
+            shard_flat = (
+                list(_flatten(shardings[name]).values())
+                if shardings and name in shardings else [None] * len(flat_keys)
+            )
+            meta = manifest["trees"][name]
+            for k, sh in zip(flat_keys, shard_flat):
+                arr = data[f"{name}::{k}"]
+                want = meta[k]["dtype"]
+                if str(arr.dtype) != want:
+                    arr = arr.astype(jnp.dtype(want))
+                leaves.append(
+                    jax.device_put(arr, sh) if sh is not None
+                    else jax.numpy.asarray(arr)
+                )
+            treedef = jax.tree_util.tree_structure(tree)
+            out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return manifest["step"], out, manifest.get("extras", {})

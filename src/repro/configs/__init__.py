@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned archs (+ reduced smoke variants).
+
+``get(name)`` / ``get_smoke(name)`` resolve configs; ``SKIP`` records the
+(arch, shape) cells excluded per the assignment rules (quadratic-attention
+archs skip long_500k — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, input_specs
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "minicpm-2b": "minicpm_2b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "minitron-8b": "minitron_8b",
+    "hymba-1.5b": "hymba_1_5b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-tiny": "whisper_tiny",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+def cell_skipped(arch: str, shape: str) -> Tuple[bool, str]:
+    """(skipped?, reason) for an (arch x shape) dry-run cell."""
+    cfg = get(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return True, ("full quadratic attention at 512k context "
+                      "(per assignment: run only SSM/hybrid/linear-attn)")
+    return False, ""
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch, shape) pair in the assignment (40 cells)."""
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            skipped, reason = cell_skipped(arch, shape)
+            if skipped and not include_skipped:
+                continue
+            yield arch, shape, skipped, reason

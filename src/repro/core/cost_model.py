@@ -1,0 +1,390 @@
+"""Cost models: the paper's Table-I heuristics, adapted to TPU, + rooflines.
+
+Two clearly-separated models (DESIGN.md §5.2):
+
+1. ``table1_reduction``   — the paper's CPU/SIMD memory-instruction-reduction
+   closed forms, reproduced *literally* (per additional vector variable).
+   Used to validate Observations 1-5 and by ``benchmarks/bench_heuristics``.
+
+2. ``gemm_traffic`` / ``conv_traffic`` — the TPU adaptation: HBM<->VMEM bytes
+   moved by a tiled Pallas kernel under a given ``DataflowSpec`` (grid order
+   + VMEM residency).  This is what the explorer ranks on.
+
+Plus the roofline terms used by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.core.dataflow import (
+    ANCHOR_GRID_ORDER,
+    ConvProblem,
+    DataflowSpec,
+    GemmProblem,
+    Residency,
+    Stationarity,
+    IS,
+    OS,
+    WS,
+)
+
+_DTYPE_BYTES = {
+    "float64": 8,
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int32": 4,
+    "uint32": 4,
+    "int8": 1,
+    "uint8": 1,
+    "bool": 1,
+    "binary_packed": 4,  # 32 binary channels per uint32 lane
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    key = str(dtype)
+    if key not in _DTYPE_BYTES:
+        raise KeyError(f"unknown dtype {dtype!r}")
+    return _DTYPE_BYTES[key]
+
+
+# ---------------------------------------------------------------------------
+# Hardware description (TPU v5e class; see task spec for the constants).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per ICI link
+    vmem_bytes: int = 16 * 1024 * 1024  # software-managed fast memory
+    lane: int = 128                     # minor-dim tiling
+    sublane: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"float32": 8, "bfloat16": 16, "int8": 32}
+    )
+
+    def peak_flops_for(self, dtype: str) -> float:
+        # int8 runs at 2x bf16 on the MXU; fp32 at ~1/4 (v5e has no fp32 MXU,
+        # fp32 matmuls decompose); binary uses the VPU xor+popcount path.
+        scale = {
+            "bfloat16": 1.0,
+            "float16": 1.0,
+            "int8": 2.0,
+            "float32": 0.25,
+            "binary_packed": 0.5,
+        }.get(str(dtype), 1.0)
+        return self.peak_flops * scale
+
+
+V5E = HardwareSpec()
+
+
+# ---------------------------------------------------------------------------
+# 1. Paper Table I, literal CPU/SIMD form.
+# ---------------------------------------------------------------------------
+def table1_reduction(
+    anchor: Stationarity,
+    aux: Stationarity,
+    conv: ConvProblem,
+    n_aux_vars: int = 1,
+) -> Tuple[float, float]:
+    """(reads_saved, writes_saved) **per additional aux vector variable**.
+
+    Literal transcription of the paper's Table I (simplified forms, as in
+    the paper).  Units: memory instructions of one vector variable each.
+    """
+    H, R, E, s, fw, fh, ih = (
+        conv.H, conv.R, conv.E, conv.s, conv.fw, conv.fh, conv.ih,
+    )
+    if anchor == OS:
+        # "Both" aux rows: every stashed input or weight variable saves E reads.
+        if aux in (IS, WS):
+            return (float(E), 0.0)
+    elif anchor == WS:
+        if aux == IS:
+            return (float(R), 0.0)
+        if aux == OS:
+            return (float(R), float(R))
+    elif anchor == IS:
+        if s == 1:
+            if aux == WS:
+                return (float(H), 0.0)
+            if aux == OS:
+                return (float(H), float(H))
+        else:
+            if aux == WS:
+                if n_aux_vars <= fw:
+                    return (H / s, 0.0)
+                return (H / ((fw - s) * s), 0.0)
+            if aux == OS:
+                if n_aux_vars == 1:
+                    g = H + H / fw
+                    return (g, g)
+                if n_aux_vars == 2:
+                    g = (ih / max(fw - s, 1)) * (H + H / fw) + (ih / s) * max(
+                        fw - s - 1, 0
+                    )
+                    return (g, g)
+                g = (fh - s) * (fw - s) * H / R
+                return (g, g)
+    raise ValueError(f"no Table-I row for anchor={anchor} aux={aux} s={s}")
+
+
+def paper_observations_hold(conv: ConvProblem) -> Dict[str, bool]:
+    """Re-derive Observations 1-5 from Table I for a given layer (tested)."""
+    obs = {}
+    # Obs 1: WS gains least per aux variable.
+    ws_gain = max(sum(table1_reduction(WS, a, conv)) for a in (IS, OS))
+    os_gain = sum(table1_reduction(OS, WS, conv))
+    is_gain = sum(table1_reduction(IS, OS, conv, n_aux_vars=1))
+    obs["obs1_ws_gains_least"] = ws_gain <= min(os_gain, is_gain)
+    # Obs 3: under OS, input-aux == weight-aux.
+    obs["obs3_os_aux_symmetric"] = table1_reduction(
+        OS, IS, conv
+    ) == table1_reduction(OS, WS, conv)
+    # Obs 4: under IS, output-aux >= weight-aux.
+    obs["obs4_is_output_first"] = sum(
+        table1_reduction(IS, OS, conv, 1)
+    ) >= sum(table1_reduction(IS, WS, conv, 1))
+    # Obs 5: under WS, output-aux >= input-aux.
+    obs["obs5_ws_output_first"] = sum(
+        table1_reduction(WS, OS, conv)
+    ) >= sum(table1_reduction(WS, IS, conv))
+    return obs
+
+
+# ---------------------------------------------------------------------------
+# 2. TPU HBM<->VMEM traffic model for tiled kernels.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Bytes moved between HBM and VMEM, per operand class."""
+
+    reads: Dict[Stationarity, int]
+    writes: Dict[Stationarity, int]
+    vmem_peak: int
+    feasible: bool  # fits in the VMEM budget
+
+    @property
+    def total(self) -> int:
+        return sum(self.reads.values()) + sum(self.writes.values())
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def gemm_vmem_footprint(p: GemmProblem, spec: DataflowSpec) -> int:
+    """Peak VMEM bytes claimed by the dataflow (double-buffered streams)."""
+    bm, bk, bn = spec.block
+    ib, ob = dtype_bytes(p.in_dtype), dtype_bytes(p.out_dtype)
+    ab = dtype_bytes(p.acc_dtype)
+    foot = 0
+    # streamed blocks are double-buffered by the Pallas pipeline
+    res_a = spec.residency(IS)
+    res_b = spec.residency(WS)
+    res_o = spec.residency(OS)
+    foot += {
+        Residency.STREAMED: 2 * bm * bk,
+        Residency.STRIPE: bm * p.k,
+        Residency.WHOLE: p.m * p.k,
+    }[res_a] * ib
+    foot += {
+        Residency.STREAMED: 2 * bk * bn,
+        Residency.STRIPE: p.k * bn,
+        Residency.WHOLE: p.k * p.n,
+    }[res_b] * ib
+    foot += {
+        Residency.STREAMED: 2 * bm * bn,
+        Residency.STRIPE: bm * p.n if spec.anchor == IS else p.m * bn,
+        Residency.WHOLE: p.m * p.n,
+    }[res_o] * ob
+    if spec.anchor == OS:
+        foot += bm * bn * ab  # scratch accumulator
+    return foot
+
+
+def gemm_traffic(p: GemmProblem, spec: DataflowSpec) -> Traffic:
+    """HBM bytes moved by the tiled kernel realizing ``spec`` on ``p``.
+
+    Derivation (DESIGN.md §2): an operand whose block index is constant
+    across consecutive grid steps is fetched once per distinct index; a
+    streamed operand is re-fetched on every sweep of the grid dims its
+    index does not depend on.
+    """
+    bm, bk, bn = spec.block
+    gm, gk, gn = _ceil(p.m, bm), _ceil(p.k, bk), _ceil(p.n, bn)
+    ib, ob = dtype_bytes(p.in_dtype), dtype_bytes(p.out_dtype)
+    A, B, O = p.m * p.k * ib, p.k * p.n * ib, p.m * p.n * ob
+
+    res_a, res_b, res_o = (
+        spec.residency(IS), spec.residency(WS), spec.residency(OS)
+    )
+    reads: Dict[Stationarity, int] = {}
+    writes: Dict[Stationarity, int] = {IS: 0, WS: 0, OS: 0}
+
+    if spec.anchor == OS:
+        writes[OS] = O  # flushed once from the scratch accumulator
+        reads[OS] = 0
+        # Only one streamed-aux operand can own the outer grid position; the
+        # aux_priority decides (paper Alg. 8: weight first).  WHOLE residency
+        # removes the conflict.
+        a_once = res_a == Residency.WHOLE
+        b_once = res_b == Residency.WHOLE
+        stripes = [
+            st
+            for st in spec.aux_priority
+            if spec.residency(st) == Residency.STRIPE and st in (IS, WS)
+        ]
+        if not stripes:
+            stripes = [
+                st for st in (WS, IS) if spec.residency(st) == Residency.STRIPE
+            ]
+        if stripes:
+            first = stripes[0]
+            a_once = a_once or (first == IS)
+            b_once = b_once or (first == WS)
+            # a second stripe also sticks iff the first is WHOLE-resident
+            for st in stripes[1:]:
+                if (st == IS and b_once and res_b == Residency.WHOLE) or (
+                    st == WS and a_once and res_a == Residency.WHOLE
+                ):
+                    a_once = a_once or st == IS
+                    b_once = b_once or st == WS
+        reads[IS] = A if a_once else gn * A
+        reads[WS] = B if b_once else gm * B
+    elif spec.anchor == WS:
+        reads[WS] = B  # anchored: fetched exactly once
+        a_once = res_a in (Residency.STRIPE, Residency.WHOLE)
+        reads[IS] = A if a_once else gn * A
+        if res_o in (Residency.STRIPE, Residency.WHOLE):
+            reads[OS] = 0
+            writes[OS] = O
+        else:  # read-modify-write per reduction visit
+            reads[OS] = gk * O
+            writes[OS] = gk * O
+    elif spec.anchor == IS:
+        reads[IS] = A
+        b_once = res_b == Residency.WHOLE  # stripes don't survive the m sweep
+        reads[WS] = B if b_once else gm * B
+        if res_o in (Residency.STRIPE, Residency.WHOLE):
+            reads[OS] = 0
+            writes[OS] = O
+        else:
+            reads[OS] = gk * O
+            writes[OS] = gk * O
+    else:
+        raise ValueError(spec.anchor)
+
+    foot = gemm_vmem_footprint(p, spec)
+    return Traffic(
+        reads=reads,
+        writes=writes,
+        vmem_peak=foot,
+        feasible=foot <= spec.vmem_budget,
+    )
+
+
+def conv_traffic(p: ConvProblem, spec: DataflowSpec) -> Traffic:
+    """Conv traffic via the implicit-GEMM view + window-overlap correction.
+
+    A streamed conv input is read through overlapping windows (R/s^2 reuse
+    forfeited); STRIPE/WHOLE residency recovers the unique-bytes bound —
+    this is exactly the paper's input-reuse argument (Fig. 4) in bytes.
+    """
+    g = p.as_gemm()
+    t = gemm_traffic(g, spec)
+    unique_in = p.n * p.H * p.cin * dtype_bytes(p.in_dtype)
+    reads = dict(t.reads)
+    if spec.residency(IS) in (Residency.STRIPE, Residency.WHOLE):
+        # resident input: halo rows are fetched once -> unique bytes
+        refetch = reads[IS] // max(g.m * g.k * dtype_bytes(g.in_dtype), 1)
+        reads[IS] = max(1, refetch) * unique_in if spec.anchor != IS else unique_in
+        if spec.residency(IS) == Residency.WHOLE or spec.anchor == IS:
+            reads[IS] = unique_in
+    return Traffic(reads, dict(t.writes), t.vmem_peak, t.feasible)
+
+
+# ---------------------------------------------------------------------------
+# 3. Roofline terms (EXPERIMENTS.md §Roofline).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    chips: int
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the roofline-bound time spent at peak compute."""
+        if self.bound_time == 0:
+            return 0.0
+        return self.t_compute / self.bound_time
+
+
+def roofline(
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float,
+    chips: int = 1,
+    hw: HardwareSpec = V5E,
+    dtype: str = "bfloat16",
+) -> RooflineTerms:
+    """The three-term roofline from the task spec.
+
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * hbm_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are *global* (whole-step)
+    quantities; per-chip values are obtained by the division.
+    """
+    return RooflineTerms(
+        t_compute=flops / (chips * hw.peak_flops_for(dtype)),
+        t_memory=hbm_bytes / (chips * hw.hbm_bw),
+        t_collective=collective_bytes / (chips * hw.ici_bw),
+        chips=chips,
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes=collective_bytes,
+    )
+
+
+def model_flops(n_params: int, tokens: int, training: bool = True) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference forward."""
+    return (6.0 if training else 2.0) * n_params * tokens
+
+
+def traffic_seconds(t: Traffic, hw: HardwareSpec = V5E) -> float:
+    return t.total / hw.hbm_bw
+
+
+def gemm_time_estimate(
+    p: GemmProblem, spec: DataflowSpec, hw: HardwareSpec = V5E
+) -> float:
+    """max(compute, memory) single-chip estimate used for ranking dataflows."""
+    t = gemm_traffic(p, spec)
+    tc = p.flops / hw.peak_flops_for(p.in_dtype)
+    tm = t.total / hw.hbm_bw
+    penalty = 0.0 if t.feasible else float("inf")
+    return max(tc, tm) + penalty

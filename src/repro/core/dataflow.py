@@ -1,0 +1,225 @@
+"""Dataflow specifications — the paper's central abstraction, adapted to TPU.
+
+A *dataflow* is (1) an **anchoring stationarity** that fixes the grid
+iteration order of a tiled kernel, and (2) an ordered set of **auxiliary
+stationarities** that allocate leftover VMEM capacity to stash non-anchored
+operands (the TPU analogue of stashing in spare SIMD registers).
+
+Paper mapping (DESIGN.md §2):
+  anchoring stationarity  -> which operand's block index is held constant in
+                             the innermost grid dimensions
+  auxiliary stationarity  -> VMEM residency of a non-anchored operand
+                             (stripe-resident or whole-resident)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Mapping, Optional, Sequence, Tuple
+
+
+class Stationarity(str, enum.Enum):
+    """Operand classes whose reuse a dataflow can exploit (paper §II/§III)."""
+
+    INPUT = "input"
+    WEIGHT = "weight"
+    OUTPUT = "output"
+
+    def __repr__(self) -> str:  # terse repr for benchmark tables
+        return self.value
+
+
+class Residency(str, enum.Enum):
+    """How an auxiliary operand is held in VMEM.
+
+    STREAMED : re-fetched per grid step that needs it (no aux stationarity).
+    STRIPE   : one block-stripe along the anchored axis stays resident while
+               the inner grid dims iterate (a few "vector variables").
+    WHOLE    : the entire operand is pinned in VMEM for the kernel's lifetime
+               (the paper's "all spare registers" limit case).
+    """
+
+    STREAMED = "streamed"
+    STRIPE = "stripe"
+    WHOLE = "whole"
+
+    def __repr__(self) -> str:
+        return self.value
+
+
+IS = Stationarity.INPUT
+WS = Stationarity.WEIGHT
+OS = Stationarity.OUTPUT
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowSpec:
+    """A fully-specified extended dataflow for a GEMM-like tiled kernel.
+
+    Attributes:
+      anchor: the anchoring stationarity (decides grid iteration order).
+      aux: mapping from non-anchored operand class to its VMEM residency.
+        Operands absent from the map are ``STREAMED``.
+      aux_priority: allocation order used by the explorer when the VMEM
+        budget cannot hold every requested residency (paper Alg. 8 uses
+        ``(WEIGHT, INPUT)`` under an OS anchor).
+      block: (bm, bk, bn) tile shape for the underlying GEMM view.
+      vmem_budget: bytes of VMEM this dataflow may claim.
+    """
+
+    anchor: Stationarity
+    # stored as a sorted tuple of (operand, residency) pairs so the spec is
+    # hashable (jit static arg); constructors accept a Mapping too.
+    aux: Tuple[Tuple[Stationarity, Residency], ...] = ()
+    aux_priority: Tuple[Stationarity, ...] = ()
+    block: Tuple[int, int, int] = (128, 128, 128)
+    vmem_budget: int = 16 * 1024 * 1024
+
+    def __post_init__(self) -> None:
+        aux = dict(self.aux) if not isinstance(self.aux, dict) else self.aux
+        if self.anchor in aux:
+            raise ValueError(
+                f"anchor {self.anchor!r} cannot also be auxiliary"
+            )
+        for st, res in aux.items():
+            if not isinstance(st, Stationarity) or not isinstance(res, Residency):
+                raise TypeError(f"bad aux entry {st!r}: {res!r}")
+        object.__setattr__(
+            self,
+            "aux",
+            tuple(sorted(aux.items(), key=lambda kv: kv[0].value)),
+        )
+        bm, bk, bn = self.block
+        if min(bm, bk, bn) <= 0:
+            raise ValueError(f"non-positive block {self.block}")
+
+    @property
+    def aux_map(self) -> Mapping[Stationarity, Residency]:
+        return dict(self.aux)
+
+    # -- convenience ------------------------------------------------------
+    def residency(self, operand: Stationarity) -> Residency:
+        if operand == self.anchor:
+            # The anchored operand is by construction held across the inner
+            # grid dims; report WHOLE-like stickiness via STRIPE semantics.
+            return Residency.STRIPE
+        return self.aux_map.get(operand, Residency.STREAMED)
+
+    @property
+    def name(self) -> str:
+        parts = [f"{self.anchor.value[0].upper()}S"]
+        for st, res in self.aux:
+            if res != Residency.STREAMED:
+                parts.append(f"{st.value[0]}:{res.value}")
+        return "+".join(parts)
+
+    def with_block(self, block: Tuple[int, int, int]) -> "DataflowSpec":
+        return dataclasses.replace(self, block=block)
+
+    # -- canonical dataflows ----------------------------------------------
+    @classmethod
+    def basic(cls, anchor: Stationarity, **kw) -> "DataflowSpec":
+        """A basic dataflow: anchoring stationarity only (paper §II)."""
+        return cls(anchor=anchor, aux={}, aux_priority=(), **kw)
+
+    @classmethod
+    def optimized(cls, **kw) -> "DataflowSpec":
+        """Paper Alg. 8: OS anchor, aux priority weight-then-input."""
+        return cls(
+            anchor=OS,
+            aux={WS: Residency.STRIPE, IS: Residency.STREAMED},
+            aux_priority=(WS, IS),
+            **kw,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    """Shape/dtype description of a GEMM-like workload: (M,K)x(K,N)->(M,N)."""
+
+    m: int
+    k: int
+    n: int
+    in_dtype: str = "bfloat16"
+    out_dtype: str = "float32"
+    acc_dtype: str = "float32"
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.k * self.n
+
+    def operand_bytes(self) -> Mapping[Stationarity, int]:
+        from repro.core.cost_model import dtype_bytes
+
+        ib = dtype_bytes(self.in_dtype)
+        ob = dtype_bytes(self.out_dtype)
+        return {
+            IS: self.m * self.k * ib,
+            WS: self.k * self.n * ib,
+            OS: self.m * self.n * ob,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvProblem:
+    """Direct-convolution workload in the paper's notation (Fig. 3).
+
+    ih/iw: input spatial; fh/fw: filter; s: stride; cin/cout: channels;
+    n: batch. H = ih*iw, R = fh*fw, E = oh*ow as in the paper.
+    """
+
+    ih: int
+    iw: int
+    fh: int
+    fw: int
+    s: int
+    cin: int
+    cout: int
+    n: int = 1
+    in_dtype: str = "int8"
+    out_dtype: str = "int32"
+
+    @property
+    def oh(self) -> int:
+        return (self.ih - self.fh) // self.s + 1
+
+    @property
+    def ow(self) -> int:
+        return (self.iw - self.fw) // self.s + 1
+
+    # Paper notation -------------------------------------------------------
+    @property
+    def H(self) -> int:
+        return self.ih * self.iw
+
+    @property
+    def R(self) -> int:
+        return self.fh * self.fw
+
+    @property
+    def E(self) -> int:
+        return self.oh * self.ow
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.n * self.E * self.R * self.cin * self.cout
+
+    def as_gemm(self) -> GemmProblem:
+        """Implicit-GEMM view: M = n*oh*ow, K = fh*fw*cin, N = cout."""
+        return GemmProblem(
+            m=self.n * self.E,
+            k=self.R * self.cin,
+            n=self.cout,
+            in_dtype=self.in_dtype,
+            out_dtype=self.out_dtype,
+        )
+
+
+# Grid iteration orders per anchor (innermost dim last). The anchored
+# operand's block index is constant across the innermost dim(s); see
+# kernels/matmul_df for the realization.
+ANCHOR_GRID_ORDER = {
+    OS: ("m", "n", "k"),  # out tile (m,n) fixed while k reduces -> scratch acc
+    WS: ("k", "n", "m"),  # weight tile (k,n) fixed while m sweeps -> out RMW
+    IS: ("m", "k", "n"),  # input tile (m,k) fixed while n sweeps -> out RMW
+}

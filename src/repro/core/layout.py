@@ -1,0 +1,93 @@
+"""End-to-end layout/dataflow chain optimization (paper §IV-C).
+
+Given a chain of layers, each with several (layout, dataflow) options of
+known per-layer cost, pick one option per layer minimizing total cost
+including layout-transformation costs between successive layers — the
+paper's dynamic-programming approach.
+
+The paper also observes that reducing along fw/fh/ic lets outputs be
+written flexibly, making most transitions free; ``transition_cost``
+models that with a ``flexible_writes`` flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerOption:
+    """One (memory layout, dataflow) implementation choice for a layer."""
+
+    layout: str          # e.g. "NCHWc128", "NHWC"
+    dataflow: str        # DataflowSpec.name
+    cost: float          # per-layer execution cost (seconds or bytes)
+    out_bytes: int = 0   # activation size (drives relayout cost)
+
+
+def transition_cost(
+    prev: LayerOption, nxt: LayerOption, flexible_writes: bool = True,
+    hbm_bw: float = 819e9,
+) -> float:
+    """Cost of converting ``prev``'s output layout to ``nxt``'s input layout.
+
+    flexible_writes=True is the paper's finding: the producing layer can
+    emit any layout for free because reduction order decouples from write
+    order. Otherwise a relayout pass reads+writes the activation once.
+    """
+    if prev.layout == nxt.layout or flexible_writes:
+        return 0.0
+    return 2.0 * prev.out_bytes / hbm_bw
+
+
+def optimize_chain(
+    layers: Sequence[Sequence[LayerOption]],
+    flexible_writes: bool = True,
+) -> Tuple[float, List[int]]:
+    """DP over the chain. Returns (total cost, option index per layer)."""
+    if not layers:
+        return 0.0, []
+    # dp[j] = best cost ending with option j of current layer
+    dp = [opt.cost for opt in layers[0]]
+    back: List[List[int]] = []
+    for li in range(1, len(layers)):
+        ndp = []
+        nback = []
+        for opt in layers[li]:
+            best_j, best_c = 0, float("inf")
+            for j, prev_opt in enumerate(layers[li - 1]):
+                c = dp[j] + transition_cost(prev_opt, opt, flexible_writes)
+                if c < best_c:
+                    best_c, best_j = c, j
+            ndp.append(best_c + opt.cost)
+            nback.append(best_j)
+        dp, _ = ndp, back.append(nback)
+    # backtrack
+    idx = int(min(range(len(dp)), key=dp.__getitem__))
+    total = dp[idx]
+    choice = [idx]
+    for nback in reversed(back):
+        idx = nback[idx]
+        choice.append(idx)
+    choice.reverse()
+    return total, choice
+
+
+def brute_force_chain(
+    layers: Sequence[Sequence[LayerOption]],
+    flexible_writes: bool = True,
+) -> Tuple[float, List[int]]:
+    """Exponential reference for property tests."""
+    import itertools
+
+    best = (float("inf"), [])
+    for combo in itertools.product(*[range(len(l)) for l in layers]):
+        cost = sum(layers[i][j].cost for i, j in enumerate(combo))
+        for i in range(1, len(combo)):
+            cost += transition_cost(
+                layers[i - 1][combo[i - 1]], layers[i][combo[i]],
+                flexible_writes,
+            )
+        if cost < best[0]:
+            best = (cost, list(combo))
+    return best

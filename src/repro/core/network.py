@@ -1,0 +1,185 @@
+"""End-to-end network optimization (paper §IV-B/C complete pipeline).
+
+Given a whole conv network (list of layer specs, including the
+depthwise / grouped variants the paper targets), this:
+
+  1. explores extended dataflows per layer (heuristics + cost model),
+  2. runs the §IV-C layout/dataflow chain DP over per-layer options with
+     transition costs,
+  3. emits an executable plan: per-layer DataflowSpec + predicted
+     traffic/time, realizable through kernels/ops.conv2d.
+
+This is the analogue of the paper's end-to-end code generation flow that
+produced the Fig. 8 networks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import cost_model, explorer, layout
+from repro.core.dataflow import ConvProblem, DataflowSpec, GemmProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayerSpec:
+    """One conv layer in a network, with grouping (paper §IV scope:
+    simple / depthwise / grouped / shuffled-grouped convolutions)."""
+
+    ih: int
+    iw: int
+    fh: int
+    fw: int
+    s: int
+    cin: int
+    cout: int
+    groups: int = 1          # cin == cout == groups -> depthwise
+    in_dtype: str = "int8"
+
+    def problems(self) -> ConvProblem:
+        """Per-group conv problem (groups share the dataflow choice)."""
+        if self.cin % self.groups or self.cout % self.groups:
+            raise ValueError(f"groups {self.groups} must divide channels")
+        return ConvProblem(
+            ih=self.ih, iw=self.iw, fh=self.fh, fw=self.fw, s=self.s,
+            cin=self.cin // self.groups, cout=self.cout // self.groups,
+            in_dtype=self.in_dtype,
+        )
+
+    @property
+    def is_depthwise(self) -> bool:
+        return self.groups == self.cin == self.cout
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    layer: ConvLayerSpec
+    spec: DataflowSpec
+    layout: str
+    est_seconds: float
+    traffic_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    layers: List[LayerPlan]
+    total_seconds: float
+
+    def describe(self) -> str:
+        lines = []
+        for i, lp in enumerate(self.layers):
+            tag = "dw" if lp.layer.is_depthwise else (
+                f"g{lp.layer.groups}" if lp.layer.groups > 1 else "conv")
+            lines.append(
+                f"  L{i:02d} {tag:5s} {lp.layer.ih}x{lp.layer.iw} "
+                f"f{lp.layer.fh} s{lp.layer.s} "
+                f"{lp.layer.cin}->{lp.layer.cout}: {lp.spec.name:22s} "
+                f"{lp.est_seconds*1e6:9.1f}us {lp.layout}"
+            )
+        lines.append(f"  total: {self.total_seconds*1e6:.1f}us (est.)")
+        return "\n".join(lines)
+
+
+def plan_layer(
+    layer: ConvLayerSpec,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    top: int = 3,
+) -> List[Tuple[DataflowSpec, float, int]]:
+    """Top dataflow options for one layer: (spec, est_s, traffic_bytes).
+
+    Grouped convs explore the per-group GEMM and scale costs by the
+    group count (groups run the same dataflow back-to-back — this is
+    exactly the paper's treatment: grouping shrinks K and N, shifting
+    which auxiliary stationarity fits in the register/VMEM budget).
+    """
+    conv = layer.problems()
+    g = conv.as_gemm()
+    cands = explorer.explore(g, hw, top=top)
+    out = []
+    for c in cands:
+        out.append((c.spec, c.est_seconds * layer.groups,
+                    c.traffic_bytes * layer.groups))
+    return out
+
+
+def optimize_network(
+    net: Sequence[ConvLayerSpec],
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    flexible_writes: bool = True,
+    layouts: Sequence[str] = ("NCHWc128",),
+) -> NetworkPlan:
+    """Explore per-layer dataflows, then chain-DP over (layout, dataflow).
+
+    With ``flexible_writes`` (the paper's finding) layout transitions are
+    free and the DP reduces to per-layer argmin; with it disabled the DP
+    balances relayout cost against per-layer gains.
+    """
+    per_layer_options: List[List[layout.LayerOption]] = []
+    per_layer_specs: List[List[DataflowSpec]] = []
+    for lyr in net:
+        opts = []
+        specs = []
+        conv = lyr.problems()
+        out_bytes = conv.E * lyr.cout * cost_model.dtype_bytes(
+            conv.out_dtype)
+        for spec, est_s, traffic in plan_layer(lyr, hw):
+            for lo in layouts:
+                opts.append(layout.LayerOption(
+                    layout=lo, dataflow=spec.name, cost=est_s,
+                    out_bytes=out_bytes,
+                ))
+                specs.append(spec)
+        per_layer_options.append(opts)
+        per_layer_specs.append(specs)
+
+    total, choice = layout.optimize_chain(per_layer_options,
+                                          flexible_writes)
+    plans = []
+    for lyr, opts, specs, j in zip(net, per_layer_options, per_layer_specs,
+                                   choice):
+        plans.append(LayerPlan(
+            layer=lyr, spec=specs[j], layout=opts[j].layout,
+            est_seconds=opts[j].cost, traffic_bytes=0,
+        ))
+    return NetworkPlan(layers=plans, total_seconds=total)
+
+
+# The paper's Fig. 8 network bodies, with the depthwise/grouped variants
+# from its §IV scope (mobilenet-style blocks for the depthwise rows).
+def resnet18_int8() -> List[ConvLayerSpec]:
+    spec = []
+    body = [
+        (56, 3, 1, 64, 64, 1, 4),
+        (56, 3, 2, 64, 128, 1, 1),
+        (28, 3, 1, 128, 128, 1, 3),
+        (28, 3, 2, 128, 256, 1, 1),
+        (14, 3, 1, 256, 256, 1, 3),
+        (14, 3, 2, 256, 512, 1, 1),
+        (7, 3, 1, 512, 512, 1, 3),
+    ]
+    for hw_, f, s, cin, cout, g, rep in body:
+        spec.extend([ConvLayerSpec(hw_, hw_, f, f, s, cin, cout, g)] * rep)
+    return spec
+
+
+def mobilenet_block_int8(hw_: int, cin: int, cout: int,
+                         s: int = 1) -> List[ConvLayerSpec]:
+    """Depthwise-separable block: depthwise 3x3 + pointwise 1x1."""
+    return [
+        ConvLayerSpec(hw_, hw_, 3, 3, s, cin, cin, groups=cin),
+        ConvLayerSpec((hw_ - 3) // s + 1, (hw_ - 3) // s + 1, 1, 1, 1,
+                      cin, cout, groups=1),
+    ]
+
+
+def shufflenet_stage_int8(hw_: int, c: int, groups: int = 4,
+                          rep: int = 3) -> List[ConvLayerSpec]:
+    """Shuffled grouped convolutions (paper §IV: 'shuffled grouped')."""
+    out = []
+    for _ in range(rep):
+        out.append(ConvLayerSpec(hw_, hw_, 1, 1, 1, c, c, groups=groups))
+        out.append(ConvLayerSpec(hw_, hw_, 3, 3, 1, c, c, groups=c))
+        out.append(ConvLayerSpec(hw_ - 2, hw_ - 2, 1, 1, 1, c, c,
+                                 groups=groups))
+        hw_ -= 2
+    return out

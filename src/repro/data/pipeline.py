@@ -1,0 +1,84 @@
+"""Data pipeline: deterministic, stateless, shardable synthetic LM batches.
+
+Batches are a pure function of (seed, step) — so restart-after-failure
+resumes bit-exactly from the checkpointed step with no iterator state to
+persist, and every host can materialize exactly its shard of the global
+batch (``make_global_batch`` uses ``jax.make_array_from_callback``).
+
+The token stream is a deterministic mixture (Zipf-ish unigram + short
+copy motifs) so small models show a real, reproducible loss decrease in
+the integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    with_enc_frames: bool = False
+    d_model: int = 0
+    enc_seq_ratio: float = 1.0
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+
+    def batch_np(self, step: int) -> Dict[str, np.ndarray]:
+        """The full global batch for a step (pure function of step)."""
+        rng = self._rng(step)
+        b, s, v = self.global_batch, self.seq_len + 1, self.vocab_size
+        # Zipf-ish unigram distribution
+        ranks = np.arange(1, v + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(b, s), p=probs).astype(np.int32)
+        # inject copy motifs: second half repeats a window of the first
+        motif = min(16, self.seq_len // 4)
+        if motif >= 2:
+            start = rng.integers(0, self.seq_len // 2 - motif, size=b)
+            for i in range(b):
+                src = toks[i, start[i] : start[i] + motif]
+                dst = self.seq_len // 2 + start[i]
+                toks[i, dst : dst + motif] = src
+        out = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.with_enc_frames:
+            es = int(self.seq_len * self.enc_seq_ratio)
+            out["enc_frames"] = rng.normal(
+                size=(b, es, self.d_model)
+            ).astype(np.float32)
+        return out
+
+    def batch(self, step: int, sharding=None) -> Dict[str, jax.Array]:
+        np_batch = self.batch_np(step)
+        if sharding is None:
+            return {k: jnp.asarray(v) for k, v in np_batch.items()}
+        return {
+            k: make_global_batch(v, sharding[k] if isinstance(sharding, dict)
+                                 else sharding)
+            for k, v in np_batch.items()
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def make_global_batch(array: np.ndarray, sharding) -> jax.Array:
+    """Materialize only this host's shards of a globally-sharded batch."""
+    def cb(index):
+        return array[index]
+
+    return jax.make_array_from_callback(array.shape, sharding, cb)

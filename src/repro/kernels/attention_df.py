@@ -1,0 +1,209 @@
+"""Dataflow-parameterized attention Pallas kernels (TPU target).
+
+The paper's central result — OS-anchored dataflows with auxiliary weight
+stationarity win — *predicts* flash attention when applied to the attention
+operator:
+
+  * OS anchor: the output tile (one block of query rows) is the anchored
+    operand; the online-softmax statistics and the output accumulator live
+    in VMEM scratch across the whole KV sweep; outputs are written to HBM
+    exactly once.  KV blocks stream (they are the "weights").
+  * WS anchor (comparison variant): KV blocks are anchored — each is
+    fetched exactly once — while the running (acc, m, l) partials are
+    read-modify-written through HBM once per KV block.  This reproduces the
+    paper's WS output-traffic pathology at attention scale and is used by
+    the benchmarks, not the models.
+
+GQA is handled by an index-map head mapping (q head -> kv head).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bkv: int, gkv: int, scale: float, causal: bool,
+                  window: Optional[int], sq: int, skv: int, skv_valid: int):
+    iq, jk = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)                      # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + (skv_valid - sq)                                # right-aligned
+    kpos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < skv_valid                               # padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                                 # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)            # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == gkv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (BH, Sq, D)   batch*q_heads folded
+    k: jax.Array,            # (BHkv, Skv, D)
+    v: jax.Array,
+    group: int = 1,          # q_heads per kv head (GQA)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    skv_valid: Optional[int] = None,
+    sq_valid: Optional[int] = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """OS-anchored attention. Sq % bq == 0 and Skv % bkv == 0 (pre-padded).
+
+    ``sq_valid``/``skv_valid`` are the true (pre-padding) lengths; the
+    causal mask right-aligns the true q rows against the true kv length.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    gq, gkv = sq // bq, skv // bkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    skv_valid = skv if skv_valid is None else skv_valid
+    sq_valid = sq if sq_valid is None else sq_valid
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bkv=bkv, gkv=gkv, scale=scale, causal=causal,
+        window=window, sq=sq_valid, skv=skv, skv_valid=skv_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, gq, gkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# WS-anchored (KV-stationary) attention: benchmark variant.
+# ---------------------------------------------------------------------------
+def _kv_stationary_kernel(q_ref, k_ref, v_ref, acc_in, m_in, l_in,
+                          acc_out, m_out, l_out, *, jk: int, bq: int,
+                          bkv: int, scale: float, causal: bool,
+                          window: Optional[int], sq: int, skv_valid: int):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + (skv_valid - sq)
+    kpos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < skv_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_in[0][:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_in[0][:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_out[0] = acc_in[0] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_out[0] = jnp.broadcast_to(m_new, m_out.shape[1:])
+    l_out[0] = jnp.broadcast_to(l_new, l_out.shape[1:])
+
+
+def kv_stationary_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    group: int = 1, causal: bool = True, window: Optional[int] = None,
+    scale: Optional[float] = None, skv_valid: Optional[int] = None,
+    sq_valid: Optional[int] = None,
+    bq: int = 128, bkv: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """WS-anchored attention: each KV block fetched once; (acc, m, l)
+    partials round-trip HBM once per KV block (paper's WS traffic)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    gq, gkv = sq // bq, skv // bkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    skv_valid = skv if skv_valid is None else skv_valid
+    sq_valid = sq if sq_valid is None else sq_valid
+
+    acc = jnp.zeros((bh, sq, d), jnp.float32)
+    m = jnp.full((bh, sq, 128), NEG_INF, jnp.float32)
+    l = jnp.zeros((bh, sq, 128), jnp.float32)
+    state_spec = pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0))
+    stat_spec = pl.BlockSpec((1, bq, 128), lambda b, i: (b, i, 0))
+    for jk in range(gkv):
+        kernel = functools.partial(
+            _kv_stationary_kernel, jk=jk, bq=bq, bkv=bkv, scale=scale,
+            causal=causal, window=window, sq=sq_valid, skv_valid=skv_valid,
+        )
+        acc, m, l = pl.pallas_call(
+            kernel,
+            grid=(bh, gq),
+            in_specs=[
+                pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, bkv, d),
+                             lambda b, i, j=jk, g=group: (b // g, j, 0)),
+                pl.BlockSpec((1, bkv, d),
+                             lambda b, i, j=jk, g=group: (b // g, j, 0)),
+                state_spec, stat_spec, stat_spec,
+            ],
+            out_specs=[state_spec, stat_spec, stat_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
+                jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
+                jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
+            ],
+            input_output_aliases={3: 0, 4: 1, 5: 2},
+            interpret=interpret,
+        )(q, k, v, acc, m, l)
+    lsafe = jnp.where(l[:, :, :1] == 0.0, 1.0, l[:, :, :1])
+    return (acc / lsafe).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Binary (+-1) matmul Pallas kernel: XOR + popcount on packed uint32.
+
+TPU adaptation of the paper's binary-NN workloads (Fig. 9): the CPU
+bit-serial path has no MXU analogue, so binary GEMMs run on the VPU as
+xor + ``lax.population_count`` with the same OS-anchored dataflow the
+paper found optimal (output tile accumulates in VMEM scratch; packed
+weights stripe-resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _binary_os_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, n_bits: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                                     # (bm, bkp) uint32
+    b = b_ref[...]                                     # (bkp, bn) uint32
+    x = jnp.bitwise_xor(a[:, :, None], b[None, :, :])  # (bm, bkp, bn)
+    pops = jax.lax.population_count(x).astype(jnp.int32).sum(axis=1)
+    acc_ref[...] += pops
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        # dot = K - 2 * popcount(xor)
+        o_ref[...] = (n_bits - 2 * acc_ref[...]).astype(o_ref.dtype)
+
+
+def binary_matmul(
+    a_packed: jax.Array,   # (M, Kp) uint32
+    b_packed: jax.Array,   # (Kp, N) uint32
+    n_bits: int,           # true reduction depth K = 32 * Kp
+    bm: int = 128,
+    bkp: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, kp = a_packed.shape
+    n = b_packed.shape[1]
+    if m % bm or kp % bkp or n % bn:
+        raise ValueError(f"untileable ({m},{kp},{n}) by ({bm},{bkp},{bn})")
+    gm, gk, gn = m // bm, kp // bkp, n // bn
+    kernel = functools.partial(_binary_os_kernel, gk=gk, n_bits=n_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkp, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_packed, b_packed)

@@ -1,0 +1,152 @@
+"""Dataflow-parameterized direct convolution Pallas kernels (NHWC, TPU).
+
+TPU adaptation of the paper's conv dataflows (DESIGN.md §2):
+  * channel-last tiling = the paper's NCHWc with c = 128 lanes;
+  * the input image is held **whole-resident** in VMEM (input auxiliary
+    stationarity — conv inputs at the paper's scales fit comfortably);
+  * weights are stripe-resident per output-channel tile;
+  * anchor OS: reduction (ky, kx, cin-block) innermost, fp32/int32 scratch
+    accumulator, output written once;
+  * anchor WS: one aliased pallas_call per (ky, kx, cin-block) reduction
+    panel — outputs round-trip HBM each step (the paper's WS traffic).
+
+Shapes must be pre-padded by ``ops.conv2d`` (lane-aligned channels, halo
+rows/cols for the strided window loads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflow import DataflowSpec, Stationarity, OS, WS, IS
+
+
+def _acc_dtype(in_dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(in_dtype, jnp.integer) else jnp.float32
+
+
+def _strided_window(x, b_oh: int, ow: int, s: int):
+    """Select every s-th row/col from a contiguous (b_oh*s, ow*s, c) load."""
+    if s == 1:
+        return x
+    c = x.shape[-1]
+    x = x.reshape(b_oh, s, ow * s, c)[:, 0]
+    x = x.reshape(b_oh, ow, s, c)[:, :, 0]
+    return x
+
+
+def _os_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh, fw, gc, bc, b_oh,
+                    ow, s, n_r):
+    r = pl.program_id(3)
+    ky = r // (fw * gc)
+    kx = (r // gc) % fw
+    cb = r % gc
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = pl.program_id(1)
+    row0 = t * b_oh * s + ky
+    xs = x_ref[0, pl.dslice(row0, b_oh * s), pl.dslice(kx, ow * s),
+               pl.dslice(cb * bc, bc)]
+    xs = _strided_window(xs, b_oh, ow, s)                      # (b_oh, ow, bc)
+    wv = w_ref[ky, kx, pl.dslice(cb * bc, bc), :]              # (bc, bk)
+    part = jnp.dot(
+        xs.reshape(b_oh * ow, bc), wv,
+        preferred_element_type=acc_ref.dtype,
+    ).reshape(b_oh, ow, -1)
+    acc_ref[...] += part
+
+    @pl.when(r == n_r - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ws_conv_panel_kernel(x_ref, w_ref, o_in_ref, o_ref, *, ky, kx, cb, bc,
+                          b_oh, ow, s):
+    t = pl.program_id(1)
+    row0 = t * b_oh * s + ky
+    xs = x_ref[0, pl.dslice(row0, b_oh * s), pl.dslice(kx, ow * s),
+               pl.dslice(cb * bc, bc)]
+    xs = _strided_window(xs, b_oh, ow, s)
+    wv = w_ref[ky, kx, pl.dslice(cb * bc, bc), :]
+    part = jnp.dot(
+        xs.reshape(b_oh * ow, bc), wv, preferred_element_type=o_ref.dtype
+    ).reshape(1, b_oh, ow, -1)
+    o_ref[...] = o_in_ref[...] + part
+
+
+def conv2d_df(
+    x: jax.Array,     # (N, ih_pad, iw_pad, C)   pre-padded
+    w: jax.Array,     # (fh, fw, C, K)
+    stride: int,
+    spec: DataflowSpec,
+    oh: int,
+    ow: int,
+    b_oh: int = 8,
+    bc: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Direct conv under the given dataflow. Returns (N, oh, ow, K)."""
+    n, ih_pad, iw_pad, c = x.shape
+    fh, fw, _, kout = w.shape
+    if c % bc or kout % bk or oh % b_oh:
+        raise ValueError(f"untileable: C={c} bc={bc} K={kout} bk={bk} "
+                         f"oh={oh} b_oh={b_oh}")
+    gc, gk, goh = c // bc, kout // bk, oh // b_oh
+    n_r = fh * fw * gc
+    out_dtype = out_dtype or _acc_dtype(x.dtype)
+
+    x_spec = pl.BlockSpec((1, ih_pad, iw_pad, c),
+                          lambda b, t, j, *r: (b, 0, 0, 0))
+    w_spec = pl.BlockSpec((fh, fw, c, bk), lambda b, t, j, *r: (0, 0, 0, j))
+    o_spec = pl.BlockSpec((1, b_oh, ow, bk), lambda b, t, j, *r: (b, t, 0, j))
+
+    if spec.anchor == OS:
+        kernel = functools.partial(
+            _os_conv_kernel, fh=fh, fw=fw, gc=gc, bc=bc, b_oh=b_oh, ow=ow,
+            s=stride, n_r=n_r,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(n, goh, gk, n_r),
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
+            scratch_shapes=[pltpu.VMEM((b_oh, ow, bk), _acc_dtype(x.dtype))],
+            interpret=interpret,
+        )(x, w)
+
+    if spec.anchor in (WS, IS):
+        # WS: anchored weight panel (ky, kx, cb) re-fetched never; outputs
+        # RMW HBM once per panel. (IS over conv degenerates to the same
+        # panel loop with the input resident — the paper notes IS conv
+        # becomes irregular for s>1; we realize it identically but keep the
+        # traffic distinction in the cost model.)
+        out = jnp.zeros((n, oh, ow, kout), out_dtype)
+        for r in range(n_r):
+            ky, kx, cb = r // (fw * gc), (r // gc) % fw, r % gc
+            kernel = functools.partial(
+                _ws_conv_panel_kernel, ky=ky, kx=kx, cb=cb, bc=bc, b_oh=b_oh,
+                ow=ow, s=stride,
+            )
+            out = pl.pallas_call(
+                kernel,
+                grid=(n, goh, gk),
+                in_specs=[x_spec, w_spec, o_spec],
+                out_specs=o_spec,
+                out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
+                input_output_aliases={2: 0},
+                interpret=interpret,
+            )(x, w, out)
+        return out
+
+    raise ValueError(spec.anchor)

@@ -1,0 +1,312 @@
+"""Dataflow-parameterized tiled matmul Pallas kernels (TPU target).
+
+Each ``DataflowSpec`` lowers to a distinct ``pl.pallas_call``:
+
+  anchor=OS : grid (gm, gn, gk), k innermost; fp32/int32 VMEM scratch
+              accumulator, output flushed to HBM once per tile.
+  anchor=WS : grid (gk, gn, gm), weight tile constant while m sweeps;
+              outputs read-modify-written via input_output_aliasing
+              (reproducing the paper's WS output traffic).
+  anchor=IS : grid (gm, gk, gn), input tile constant while n sweeps;
+              outputs RMW like WS.
+
+Auxiliary stationarities change BlockSpecs (and sometimes the grid order):
+  input  STRIPE -> A block (bm, K), index (i, 0)   [resident per m-stripe]
+  weight STRIPE -> B block (K, bn), index (0, j) with n outermost
+  weight WHOLE  -> B block (K, N), index (0, 0)    [pinned for the call]
+  output STRIPE -> O block (., .) held across the reduction sweep
+                   (WS: (M, bn) per n; IS: (bm, N) per m), written once.
+
+Validated against ``ref.matmul_ref`` in interpret mode (tests/test_matmul_df).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflow import DataflowSpec, Residency, Stationarity, IS, OS, WS
+
+
+def _acc_dtype(in_dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(in_dtype, jnp.integer) else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# OS-anchored kernels.
+# ---------------------------------------------------------------------------
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, bk: int,
+               a_stripe: bool, b_res: Residency, n_first: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    if a_stripe:  # A block is (bm, K): slice the active k panel
+        a = a_ref[:, pl.dslice(k * bk, bk)]
+    b = b_ref[...]
+    if b_res == Residency.STRIPE:  # B block is (K, bn)
+        b = b_ref[pl.dslice(k * bk, bk), :]
+    elif b_res == Residency.WHOLE:  # B block is (K, N)
+        j = pl.program_id(0) if n_first else pl.program_id(1)
+        bn = acc_ref.shape[1]
+        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+    (m, kdim), (_, n) = a.shape, b.shape
+    bm, bk, bn = spec.block
+    gm, gk, gn = m // bm, kdim // bk, n // bn
+    res_a, res_b = spec.residency(IS), spec.residency(WS)
+    a_stripe = res_a in (Residency.STRIPE, Residency.WHOLE)
+    # weight-stripe residency needs n outermost so the stripe survives m
+    n_first = res_b == Residency.STRIPE
+
+    if n_first:
+        grid = (gn, gm, gk)
+        ij = lambda g0, g1: (g1, g0)  # (i, j) from (n-major grid)
+    else:
+        grid = (gm, gn, gk)
+        ij = lambda g0, g1: (g0, g1)
+
+    def a_map(g0, g1, k):
+        i, _ = ij(g0, g1)
+        return (i, 0) if a_stripe else (i, k)
+
+    def b_map(g0, g1, k):
+        _, j = ij(g0, g1)
+        if res_b == Residency.WHOLE:
+            return (0, 0)
+        if res_b == Residency.STRIPE:
+            return (0, j)
+        return (k, j)
+
+    def o_map(g0, g1, k):
+        i, j = ij(g0, g1)
+        return (i, j)
+
+    a_block = (bm, kdim) if a_stripe else (bm, bk)
+    b_block = {
+        Residency.WHOLE: (kdim, n),
+        Residency.STRIPE: (kdim, bn),
+        Residency.STREAMED: (bk, bn),
+    }[res_b]
+
+    kernel = functools.partial(
+        _os_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=res_b,
+        n_first=n_first,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a_block, a_map),
+            pl.BlockSpec(b_block, b_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# WS/IS-anchored kernels.
+#
+# Pallas TPU requires revisited output blocks to be *consecutive* in the
+# grid, so the basic (streamed-output) WS/IS dataflows — whose defining
+# property is that outputs are read-modify-written once per reduction step —
+# are lowered as one aliased pallas_call per reduction panel.  This is the
+# paper's WS/IS memory behaviour verbatim: partial sums round-trip HBM.
+# ---------------------------------------------------------------------------
+def _rmw_panel_kernel(a_ref, b_ref, o_in_ref, o_ref, *, b_whole: bool,
+                      k_panel: int, bk: int, bn: int, a_whole: bool,
+                      m_minor: bool):
+    """out(i,j) += A(i, k_panel) @ B(k_panel, j) for one reduction panel."""
+    i = pl.program_id(1) if m_minor else pl.program_id(0)
+    j = pl.program_id(0) if m_minor else pl.program_id(1)
+    a = a_ref[...]
+    if a_whole:  # A panel (M, bk) resident: slice the m rows
+        bm = o_ref.shape[0]
+        a = a_ref[pl.dslice(i * bm, bm), :]
+    b = b_ref[...]
+    if b_whole:  # B (K, N) resident: slice the active panel/tile
+        b = b_ref[pl.dslice(k_panel * bk, bk), pl.dslice(j * bn, bn)]
+    part = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+    o_ref[...] = o_in_ref[...] + part
+
+
+def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
+               m_minor: bool):
+    """Basic WS (m_minor=True) / IS (m_minor=False) with streamed outputs."""
+    (m, kdim), (_, n) = a.shape, b.shape
+    bm, bk, bn = spec.block
+    gm, gk, gn = m // bm, kdim // bk, n // bn
+    res_a = spec.residency(IS)
+    res_b = spec.residency(WS)
+    a_whole = m_minor and res_a in (Residency.STRIPE, Residency.WHOLE)
+    b_whole = (not m_minor) and res_b == Residency.WHOLE
+
+    a_block = (m, bk) if a_whole else (bm, bk)
+    b_block = (kdim, n) if b_whole else (bk, bn)
+    grid = (gn, gm) if m_minor else (gm, gn)
+
+    out = jnp.zeros((m, n), out_dtype)
+    for k in range(gk):
+        if m_minor:  # WS: weight tile constant while m sweeps (inner)
+            a_map = (lambda j, i, kk=k: (0, kk)) if a_whole else (
+                lambda j, i, kk=k: (i, kk))
+            b_map = (lambda j, i, kk=k: (kk, j))
+            o_map = lambda j, i: (i, j)
+        else:        # IS: input tile constant while n sweeps (inner)
+            a_map = lambda i, j, kk=k: (i, kk)
+            b_map = (lambda i, j: (0, 0)) if b_whole else (
+                lambda i, j, kk=k: (kk, j))
+            o_map = lambda i, j: (i, j)
+        kernel = functools.partial(
+            _rmw_panel_kernel, b_whole=b_whole, k_panel=k, bk=bk, bn=bn,
+            a_whole=a_whole, m_minor=m_minor,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(a_block, a_map),
+                pl.BlockSpec(b_block, b_map),
+                pl.BlockSpec((bm, bn), o_map),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), o_map),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            input_output_aliases={2: 0},
+            interpret=interpret,
+        )(a, b, out)
+    return out
+
+
+def _ws_stripe_kernel(a_ref, b_ref, o_ref, *, bm: int):
+    k, i = pl.program_id(1), pl.program_id(2)
+    part = jnp.dot(a_ref[...], b_ref[...],
+                   preferred_element_type=o_ref.dtype)
+    sl = pl.dslice(i * bm, bm)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[sl, :] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[sl, :] += part
+
+
+def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+    (m, kdim), (_, n) = a.shape, b.shape
+    bm, bk, bn = spec.block
+    gm, gk, gn = m // bm, kdim // bk, n // bn
+    res_a, res_o = spec.residency(IS), spec.residency(OS)
+    a_stripe = res_a in (Residency.STRIPE, Residency.WHOLE)
+
+    if res_o in (Residency.STRIPE, Residency.WHOLE):
+        # grid (gn, gk, gm): weight blocks each fetched once; output stripe
+        # (M, bn) resident per n, written once — no RMW.
+        kernel = functools.partial(_ws_stripe_kernel, bm=bm)
+        return pl.pallas_call(
+            kernel,
+            grid=(gn, gk, gm),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, k, i: (i, k)),
+                pl.BlockSpec((bk, bn), lambda j, k, i: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((m, bn), lambda j, k, i: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            interpret=interpret,
+        )(a, b)
+
+    # streamed outputs: RMW per reduction panel (the paper's WS traffic)
+    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=True)
+
+
+# ---------------------------------------------------------------------------
+# IS-anchored kernels.
+# ---------------------------------------------------------------------------
+def _is_stripe_kernel(a_ref, b_ref, o_ref, *, b_whole: bool, bk: int, bn: int):
+    k, j = pl.program_id(1), pl.program_id(2)
+    b = b_ref[...]
+    if b_whole:
+        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    part = jnp.dot(a_ref[...], b, preferred_element_type=o_ref.dtype)
+    sl = pl.dslice(j * bn, bn)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[:, sl] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[:, sl] += part
+
+
+def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+    (m, kdim), (_, n) = a.shape, b.shape
+    bm, bk, bn = spec.block
+    gm, gk, gn = m // bm, kdim // bk, n // bn
+    res_b, res_o = spec.residency(WS), spec.residency(OS)
+    b_whole = res_b == Residency.WHOLE
+    b_block = (kdim, n) if b_whole else (bk, bn)
+    b_map = (lambda i, k, j: (0, 0)) if b_whole else (lambda i, k, j: (k, j))
+
+    if res_o in (Residency.STRIPE, Residency.WHOLE):
+        kernel = functools.partial(
+            _is_stripe_kernel, b_whole=b_whole, bk=bk, bn=bn
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(gm, gk, gn),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, k, j: (i, k)),
+                pl.BlockSpec(b_block, b_map),
+            ],
+            out_specs=pl.BlockSpec((bm, n), lambda i, k, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            interpret=interpret,
+        )(a, b)
+
+    # streamed outputs: RMW per reduction panel (the paper's IS traffic)
+    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=False)
+
+
+# ---------------------------------------------------------------------------
+# Entry point.
+# ---------------------------------------------------------------------------
+def matmul_df(
+    a: jax.Array,
+    b: jax.Array,
+    spec: DataflowSpec,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) @ (K, N) under the given dataflow. Shapes must tile evenly
+    by ``spec.block`` (use ``ops.matmul`` for automatic padding)."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
+    m, kdim = a.shape
+    n = b.shape[1]
+    bm, bk, bn = spec.block
+    if m % bm or kdim % bk or n % bn:
+        raise ValueError(
+            f"shapes ({m},{kdim},{n}) must tile by block {spec.block}"
+        )
+    if out_dtype is None:
+        out_dtype = _acc_dtype(a.dtype)
+    build = {OS: _build_os, WS: _build_ws, IS: _build_is}[spec.anchor]
+    return build(a, b, out_dtype, spec, interpret)

@@ -1,0 +1,199 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle padding to tile boundaries, dataflow selection (via the
+explorer's default policy when no spec is given), backend dispatch
+(Pallas on TPU, interpret-mode Pallas or the jnp oracle elsewhere), and
+quantization plumbing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import DataflowSpec, GemmProblem, Residency, IS, OS, WS
+from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults, value=0):
+    pads = []
+    needs = False
+    for dim, mult in zip(x.shape, mults):
+        pad = (-dim) % mult
+        pads.append((0, pad))
+        needs |= pad > 0
+    return jnp.pad(x, pads, constant_values=value) if needs else x
+
+
+def default_matmul_spec(m: int, k: int, n: int, in_dtype="bfloat16",
+                        vmem_budget: int = 16 * 2 ** 20) -> DataflowSpec:
+    """Paper Alg. 8: OS anchor, aux to weights first (WHOLE if it fits,
+    else STRIPE), then inputs."""
+    from repro.core.cost_model import dtype_bytes
+
+    ib = dtype_bytes(str(in_dtype))
+    bm = min(512, max(128, m))
+    bn = min(512, max(128, n))
+    bk = min(512, max(128, k))
+    aux = {}
+    base = 2 * bm * bk * ib + 2 * bm * bn * 4 + bm * bn * 4
+    if k * n * ib + base <= vmem_budget:
+        aux[WS] = Residency.WHOLE
+        if bm * k * ib + k * n * ib + base <= vmem_budget:
+            aux[IS] = Residency.STRIPE
+    elif k * bn * ib + base <= vmem_budget:
+        aux[WS] = Residency.STRIPE
+    return DataflowSpec(anchor=OS, aux=aux, aux_priority=(WS, IS),
+                        block=(bm, bk, bn), vmem_budget=vmem_budget)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "out_dtype", "backend"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    spec: Optional[DataflowSpec] = None,
+    out_dtype=None,
+    backend: Optional[str] = None,   # "pallas" | "interpret" | "xla"
+) -> jax.Array:
+    """(M, K) @ (K, N) with automatic padding under a dataflow spec."""
+    m, k = a.shape
+    n = b.shape[1]
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.matmul_ref(a, b, out_dtype)
+    if spec is None:
+        spec = default_matmul_spec(m, k, n, str(a.dtype))
+    bm, bk, bn = spec.block
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    spec = spec.with_block((min(bm, ap.shape[0]), min(bk, ap.shape[1]),
+                            min(bn, bp.shape[1])))
+    out = matmul_df.matmul_df(ap, bp, spec, out_dtype=out_dtype,
+                              interpret=backend == "interpret")
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "spec", "b_oh", "bc", "bk", "out_dtype",
+                     "backend"),
+)
+def conv2d(
+    x: jax.Array,      # (N, H, W, Cin)
+    w: jax.Array,      # (fh, fw, Cin, Cout)
+    stride: int = 1,
+    spec: Optional[DataflowSpec] = None,
+    b_oh: int = 8,
+    bc: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Direct NHWC conv (VALID padding) under a dataflow spec."""
+    n, ih, iw, cin = x.shape
+    fh, fw, _, cout = w.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.conv2d_ref(x, w, stride, out_dtype)
+    if spec is None:
+        spec = DataflowSpec.optimized()
+
+    bc_ = min(bc, -(-cin // 128) * 128)
+    bk_ = min(bk, -(-cout // 128) * 128)
+    b_oh_ = min(b_oh, oh)
+    oh_pad = -(-oh // b_oh_) * b_oh_
+    # halo padding so every (t, ky) window load is in bounds
+    ih_need = (oh_pad - 1) * stride + fh + (stride - 1)
+    iw_need = (ow - 1) * stride + fw + (stride - 1)
+    xp = _pad_to(x, (1, 1, 1, bc_))
+    xp = jnp.pad(
+        xp,
+        ((0, 0), (0, max(0, ih_need - ih)), (0, max(0, iw_need - iw)), (0, 0)),
+    )
+    wp = _pad_to(w, (1, 1, bc_, bk_))
+    out = conv2d_df.conv2d_df(
+        xp, wp, stride, spec, oh=oh_pad, ow=ow, b_oh=b_oh_, bc=bc_, bk=bk_,
+        out_dtype=out_dtype, interpret=backend == "interpret",
+    )
+    return out[:, :oh, :, :cout]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "causal", "window", "scale", "bq", "bkv",
+                     "backend", "anchor"),
+)
+def attention(
+    q: jax.Array,            # (B, Hq, Sq, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bkv: int = 128,
+    backend: Optional[str] = None,
+    anchor: str = "os",      # "os" (flash) or "ws" (kv-stationary)
+    group: Optional[int] = None,
+) -> jax.Array:
+    """GQA attention under a dataflow anchor. Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = group or hq // hkv
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    bq_ = min(bq, -(-sq // 8) * 8)
+    bkv_ = min(bkv, -(-skv // 8) * 8)
+    qp = _pad_to(qf, (1, bq_, 1))
+    kp = _pad_to(kf, (1, bkv_, 1))
+    vp = _pad_to(vf, (1, bkv_, 1))
+    fn = (attention_df.flash_attention if anchor == "os"
+          else attention_df.kv_stationary_attention)
+    out = fn(
+        qp, kp, vp, group=group, causal=causal, window=window, scale=scale,
+        skv_valid=skv, sq_valid=sq, bq=bq_, bkv=bkv_,
+        interpret=backend == "interpret",
+    )
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "backend"))
+def binary_matmul(
+    a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.binary_matmul_ref(a_packed, b_packed, n_bits)
+    ap = _pad_to(a_packed, (128, 8))
+    bp = _pad_to(b_packed, (8, 128))
+    m, n = a_packed.shape[0], b_packed.shape[1]
+    extra_bits = 32 * (ap.shape[1] - a_packed.shape[1])
+    # zero-padded packed words xor to 0 -> popcount 0 -> contributes +32*pad
+    out = binary_mm.binary_matmul(
+        ap, bp, n_bits + extra_bits, interpret=backend == "interpret"
+    )
+    return out[:m, :n] - extra_bits
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "backend"))
+def int8_matmul(
+    aq: jax.Array, bq: jax.Array, a_scale: jax.Array, b_scale: jax.Array,
+    spec: Optional[DataflowSpec] = None, backend: Optional[str] = None,
+) -> jax.Array:
+    """Quantized GEMM: int8 x int8 -> int32 (MXU) -> dequantized f32."""
+    acc = matmul(aq, bq, spec=spec, out_dtype=jnp.int32, backend=backend)
+    return acc.astype(jnp.float32) * a_scale * b_scale

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for all kernel tests (interpret-mode allclose)
+and double as the XLA execution path used by the models on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    out = jnp.dot(a, b, preferred_element_type=acc)
+    return out.astype(out_dtype or acc)
+
+
+def conv2d_ref(
+    x: jax.Array,          # (N, H, W, Cin)
+    w: jax.Array,          # (fh, fw, Cin, Cout)
+    stride: int = 1,
+    out_dtype=None,
+) -> jax.Array:
+    """Direct NHWC convolution, VALID padding, via dot_general (pure jnp)."""
+    n, ih, iw, cin = x.shape
+    fh, fw, _, cout = w.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    acc = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    out = jnp.zeros((n, oh, ow, cout), acc)
+    for ky in range(fh):
+        for kx in range(fw):
+            xs = x[:, ky : ky + (oh - 1) * stride + 1 : stride,
+                   kx : kx + (ow - 1) * stride + 1 : stride, :]
+            out = out + jnp.einsum(
+                "nhwc,co->nhwo", xs.astype(acc), w[ky, kx].astype(acc),
+                preferred_element_type=acc,
+            )
+    return out.astype(out_dtype or acc)
+
+
+def grouped_conv2d_ref(
+    x: jax.Array,          # (N, H, W, Cin)
+    w: jax.Array,          # (fh, fw, Cin//groups, Cout)
+    stride: int = 1,
+    groups: int = 1,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped conv oracle: per-group direct conv, concatenated.
+
+    groups == Cin == Cout is depthwise (use depthwise_conv2d_ref for the
+    fast path)."""
+    n, ih, iw, cin = x.shape
+    fh, fw, cg, cout = w.shape
+    assert cin % groups == 0 and cout % groups == 0 and cg == cin // groups
+    outs = []
+    og = cout // groups
+    for g in range(groups):
+        xg = x[..., g * cg : (g + 1) * cg]
+        wg = w[..., g * og : (g + 1) * og]
+        outs.append(conv2d_ref(xg, wg, stride, out_dtype))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def depthwise_conv2d_ref(
+    x: jax.Array,          # (N, H, W, C)
+    w: jax.Array,          # (fh, fw, C)
+    stride: int = 1,
+    out_dtype=None,
+) -> jax.Array:
+    """Depthwise conv oracle (one filter per channel), VALID padding."""
+    n, ih, iw, c = x.shape
+    fh, fw, _ = w.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    acc = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    out = jnp.zeros((n, oh, ow, c), acc)
+    for ky in range(fh):
+        for kx in range(fw):
+            xs = x[:, ky : ky + (oh - 1) * stride + 1 : stride,
+                   kx : kx + (ow - 1) * stride + 1 : stride, :]
+            out = out + xs.astype(acc) * w[ky, kx].astype(acc)
+    return out.astype(out_dtype or acc)
+
+
+def attention_ref(
+    q: jax.Array,              # (B, Hq, Sq, D)
+    k: jax.Array,              # (B, Hkv, Skv, D)
+    v: jax.Array,              # (B, Hkv, Skv, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """GQA attention with optional causal mask and sliding window."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned (decode ok)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def binary_matmul_ref(a_packed: jax.Array, b_packed: jax.Array,
+                      n_bits: int) -> jax.Array:
+    """+-1 GEMM on bit-packed operands: dot = n_bits - 2*popcount(xor).
+
+    a_packed: (M, Kp) uint32, b_packed: (Kp, N) uint32 where Kp = K/32 and
+    ``n_bits`` = K (the true, pre-packing reduction depth).
+    """
+    x = jnp.bitwise_xor(a_packed[:, :, None], b_packed[None, :, :])
+    pops = jax.lax.population_count(x).astype(jnp.int32).sum(axis=1)
+    return n_bits - 2 * pops
+
+
+def pack_binary(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a +-1 (or {0,1}) tensor into uint32 along ``axis`` (len % 32 == 0)."""
+    bits = (x > 0).astype(jnp.uint32)
+    bits = jnp.moveaxis(bits, axis, -1)
+    *lead, kdim = bits.shape
+    assert kdim % 32 == 0, kdim
+    bits = bits.reshape(*lead, kdim // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = (bits * weights).sum(axis=-1).astype(jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-axis int8 quantization -> (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul_ref(aq, bq, a_scale, b_scale) -> jax.Array:
+    """Dequantized int8 GEMM oracle -> float32."""
+    acc = jnp.dot(aq, bq, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a_scale * b_scale

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train
+shapes, prefill for prefill shapes, serve_step for decode shapes) with
+ShapeDtypeStruct inputs (zero allocation), compiles it against the
+production mesh, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the compiled HLO text,
+
+into benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, input_specs
+from repro.launch import hlo_analysis, sharding
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models import flags, lm
+from repro.optim import AdamW, schedules
+from repro.serve.engine import make_serve_step
+from repro.train.step import make_train_step
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results",
+    "dryrun",
+)
+
+
+def _dist_for(cfg, mesh) -> Optional[lm.Dist]:
+    dp, tp = mesh_axes(mesh)
+    return lm.Dist(mesh=mesh, dp_axes=dp, tp_axis=tp)
+
+
+def _lower(cfg, shape, mesh, dist, remat: str, unroll: int,
+           microbatches: int):
+    """Build + lower the step function for one (cfg, shape) on a mesh."""
+    params_shape = jax.eval_shape(
+        lambda: lm.init_model(cfg, jax.random.PRNGKey(0))
+    )
+    p_sh = sharding.param_shardings(params_shape, mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        # >100B models: bf16 moments (halves optimizer HBM; DESIGN.md §5)
+        mdt = "bfloat16" if cfg.param_count() > 100e9 else "float32"
+        opt = AdamW(lr_fn=lambda s: schedules.cosine(s, 100, 10_000, 3e-4),
+                    moment_dtype=mdt)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_sh = sharding.opt_state_shardings(opt_shape, mesh)
+        b_sh = sharding.batch_shardings(specs, mesh)
+        step_fn = make_train_step(cfg, opt, dist=dist, remat=remat,
+                                  unroll=unroll, microbatches=microbatches)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_shape, opt_shape, specs)
+    elif shape.kind == "prefill":
+        b_sh = sharding.batch_shardings(specs, mesh)
+
+        def prefill_fn(params, batch):
+            return lm.prefill(params, batch["tokens"], cfg,
+                              enc_frames=batch.get("enc_frames"), dist=dist,
+                              unroll=unroll)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_shape, specs)
+    elif shape.kind == "decode":
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  cfg.act_dtype,
+                                  enc_len=(shape.seq_len
+                                           if cfg.is_encoder_decoder
+                                           else None))
+        )
+        c_sh = sharding.cache_shardings(cache_shape, mesh)
+        tok_shape = {"tokens": specs["tokens"]}
+        t_sh = sharding.batch_shardings(tok_shape, mesh)
+        serve_step = make_serve_step(cfg, dist=dist, unroll=unroll)
+
+        def step_fn(params, cache, batch):
+            return serve_step(params, cache, batch["tokens"])
+
+        jitted = jax.jit(
+            step_fn, in_shardings=(p_sh, c_sh, t_sh), donate_argnums=(1,)
+        )
+        lowered = jitted.lower(params_shape, cache_shape, tok_shape)
+    else:
+        raise ValueError(shape.kind)
+    return lowered
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               remat: str = "full", compile_: bool = True,
+               unroll: int = 1, microbatches: int = 1,
+               derive: bool = True) -> Dict:
+    """Lower+compile one cell; return the analysis record."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = _dist_for(cfg, mesh)
+    chips = mesh.size
+    t0 = time.time()
+    lowered = _lower(cfg, shape, mesh, dist, remat, unroll, microbatches)
+    t_lower = time.time() - t0
+    record: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": chips,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_seconds": round(t_lower, 2),
+        "unroll": unroll,
+        "remat": remat,
+        "microbatches": microbatches,
+    }
+    if not compile_:
+        return record
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_seconds"] = round(time.time() - t1, 2)
+    record["memory"] = hlo_analysis.memory_summary(compiled)
+    record["cost"] = hlo_analysis.cost_summary(compiled)
+    text = compiled.as_text()
+    coll = hlo_analysis.collective_stats(text)
+    record["collectives"] = {
+        "total_bytes": coll.total_bytes,
+        "by_kind_bytes": coll.bytes_by_kind,
+        "by_kind_count": coll.count_by_kind,
+    }
+    if derive:
+        try:
+            record["derived"] = derive_costs(arch, shape_name, multi_pod,
+                                             remat=remat)
+        except Exception as e:  # derivation is best-effort
+            record["derived_error"] = f"{type(e).__name__}: {e}"
+    return record
+
+
+def _exact_cost_record(cfg, shape, mesh, dist, remat: str) -> Dict:
+    """cost_analysis + collective bytes with every inner scan removed."""
+    with flags.exact_cost_mode():
+        lowered = _lower(cfg, shape, mesh, dist, remat=remat,
+                         unroll=max(cfg.n_layers, 1), microbatches=1)
+        compiled = lowered.compile()
+    cost = hlo_analysis.cost_summary(compiled)
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "transcendentals": cost.get("transcendentals", 0.0),
+        "bytes_accessed": cost.get("bytes_accessed", 0.0),
+        "collective_bytes": float(coll.total_bytes),
+        "collective_bytes_bf16_projected": float(coll.bf16_projected_bytes),
+        "collective_by_kind": coll.bytes_by_kind,
+    }
+
+
+def derive_costs(arch: str, shape_name: str, multi_pod: bool = False,
+                 remat: str = "full") -> Dict:
+    """Exact per-cell cost via 1-layer/2-layer exact-mode compiles.
+
+    XLA counts while-loop bodies once, so scan-mode cost_analysis
+    undercounts by ~n_layers (and by the inner attention/CE/SSD chunk
+    counts).  In exact mode every scan is unrolled/bypassed; costs of the
+    homogeneous layer stack extrapolate exactly:
+        total(L) = cost(L=1) + (L - 1) * [cost(L=2) - cost(L=1)].
+    """
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = _dist_for(cfg, mesh)
+    keys = ("flops", "transcendentals", "bytes_accessed",
+            "collective_bytes")
+    # (two-class path also extrapolates the bf16-projected metric)
+
+    def derive_homogeneous(cfg_h):
+        recs = {}
+        for l in (1, 2):
+            over = {"n_layers": l}
+            if cfg_h.is_encoder_decoder:
+                over["n_enc_layers"] = l
+            cfg_l = dataclasses.replace(cfg_h, **over)
+            recs[l] = _exact_cost_record(cfg_l, shape, mesh, dist, remat)
+        return recs
+
+    big_l = cfg.n_layers
+    out: Dict = {}
+    if cfg.attn_window is not None and cfg.full_attn_every:
+        # heterogeneous stack (hymba): derive per-layer costs separately
+        # for the full-attention and banded-SWA layer classes
+        out["method"] = "exact_mode_two_class_extrapolation"
+        full_cfg = dataclasses.replace(cfg, attn_window=None)
+        swa_cfg = dataclasses.replace(cfg, full_attn_every=0)
+        rf = derive_homogeneous(full_cfg)
+        rs = derive_homogeneous(swa_cfg)
+        n_full = len({0, big_l // 2, big_l - 1})
+        n_swa = big_l - n_full
+        for key in keys + ("collective_bytes_bf16_projected",):
+            d_full = max(rf[2][key] - rf[1][key], 0.0)
+            d_swa = max(rs[2][key] - rs[1][key], 0.0)
+            base = rf[1][key] - d_full   # non-layer (embed/CE) part
+            out[key] = base + n_full * d_full + n_swa * d_swa
+            out[f"{key}_per_layer"] = d_swa
+        out["collective_by_kind_L2"] = rf[2]["collective_by_kind"]
+        return out
+
+    out["method"] = "exact_mode_L1_L2_extrapolation"
+    recs = derive_homogeneous(cfg)
+    for key in keys + ("collective_bytes_bf16_projected",):
+        delta = recs[2][key] - recs[1][key]
+        if delta < 0:
+            # SPMD made different global resharding choices at L=1 vs 2;
+            # fall back to the L=2 measurement scaled (lower bound).
+            out[f"{key}_unstable"] = True
+            out[key] = recs[2][key] * big_l / 2.0
+            out[f"{key}_per_layer"] = recs[2][key] / 2.0
+        else:
+            out[key] = recs[1][key] + (big_l - 1) * delta
+            out[f"{key}_per_layer"] = delta
+    out["collective_by_kind_L2"] = recs[2]["collective_by_kind"]
+    return out
+
+
+def save_record(record: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_tag = "x".join(str(d) for d in record["mesh"])
+    fname = f"{record['arch']}__{record['shape']}__{mesh_tag}.json"
+    path = os.path.abspath(os.path.join(RESULTS_DIR, fname))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (8 for train shapes, 1 otherwise)")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--unroll", type=int, default=1,
+                    help="layer-scan unroll (full unroll = exact HLO flops)")
+    ap.add_argument("--no-derive", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s, _, _ in configs.all_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        skipped, reason = configs.cell_skipped(args.arch, args.shape)
+        if skipped:
+            print(f"SKIP {args.arch} x {args.shape}: {reason}")
+            return
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch} x {shape} x {'2x16x16' if args.multi_pod else '16x16'}"
+        mb = args.microbatches or (8 if SHAPES[shape].kind == "train" else 1)
+        try:
+            rec = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                             remat=args.remat, compile_=not args.no_compile,
+                             unroll=args.unroll,
+                             microbatches=mb,
+                             derive=not args.no_derive)
+            path = save_record(rec)
+            mem = rec.get("memory", {})
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)) / 2**30
+            flops = rec.get("derived", {}).get(
+                "flops", rec.get("cost", {}).get("flops", 0))
+            coll = rec.get("derived", {}).get(
+                "collective_bytes",
+                rec.get("collectives", {}).get("total_bytes", 0))
+            print(f"OK   {tag}: lower={rec['lower_seconds']}s "
+                  f"compile={rec.get('compile_seconds', '-')}s "
+                  f"mem/dev={per_dev:.2f}GiB flops={flops:.3e} "
+                  f"coll={coll:.3e}B -> {os.path.basename(path)}")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

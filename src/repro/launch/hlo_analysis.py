@@ -1,0 +1,139 @@
+"""Compiled-HLO analysis: collective bytes, FLOPs, memory — roofline inputs.
+
+``cost_analysis()`` gives HLO FLOPs and bytes-accessed; collective bytes
+are NOT in it, so we parse the (stable)HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per the task spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = bf16[16,256,4096]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")[\(-]"
+)
+# tuple-result collectives: (bf16[...], bf16[...]) all-reduce(
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    # f32 payloads re-counted at 2 B/elem: XLA-CPU emulates bf16 GEMMs in
+    # f32 and hoists the convert above the gather, inflating measured
+    # collective bytes ~2x vs a TPU toolchain (where weights/activations
+    # move as bf16).  The truth lies between total_bytes (raw, upper
+    # bound) and bf16_projected_bytes (lower bound).
+    bf16_projected_by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def bf16_projected_bytes(self) -> int:
+        return sum(self.bf16_projected_by_kind.values()) or self.total_bytes
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind[k]} bytes={v:,}"
+            for k, v in sorted(self.bytes_by_kind.items())
+        ]
+        return "; ".join(parts) or "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in the HLO text.
+
+    (Result shape ~ moved payload for AG/AR/A2A; for reduce-scatter the
+    *operand* is larger, but result-bytes is the per-chip traffic which
+    is what the roofline term divides by link bandwidth.)
+    """
+    by_kind: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    proj: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        hit = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                hit = c
+                break
+        if hit is None:
+            continue
+        # sum every shape on the lhs (covers tuple results)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(hit)[0]
+        nbytes = 0
+        pbytes = 0
+        for dt, dims in _TUPLE_RE.findall(lhs):
+            b = _shape_bytes(dt, dims)
+            nbytes += b
+            pbytes += b // 2 if dt == "f32" else b
+        by_kind[hit] = by_kind.get(hit, 0) + nbytes
+        count[hit] = count.get(hit, 0) + 1
+        proj[hit] = proj.get(hit, 0) + pbytes
+    return CollectiveStats(by_kind, count, proj)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """flops / bytes from compiled.cost_analysis() (robust to key variants)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # per-space bytes accessed keys like 'bytes accessed0{}'
+    for k, v in ca.items():
+        if k.startswith("bytes accessed"):
+            out.setdefault("bytes_accessed", float(ca.get("bytes accessed",
+                                                          0.0)))
+    return out
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes", "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out

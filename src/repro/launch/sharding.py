@@ -1,0 +1,168 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Megatron-pattern TP over the ``model`` axis + FSDP (ZeRO-3) over the data
+axes, by parameter-path pattern matching:
+
+  embed/lm_head (V, D)         -> (model, dp)     vocab-TP
+  wq/wk/wv/w1/w3 (D, F)        -> (dp, model)     column-parallel
+  wo/w2 (F, D)                 -> (model, dp)     row-parallel
+  moe w1/w3 (E, D, F)          -> (model, dp, -)  expert-parallel + FSDP
+  moe w2 (E, F, D)             -> (model, -, dp)
+  router / norms / mamba small -> replicated
+  stacked layer leading dim L  -> never sharded
+
+Optimizer moments inherit the parameter specs (ZeRO-1+3).  KV caches
+shard batch over dp and sequence over model (decode shapes can't shard
+heads: kv_heads < 16 for several archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _dims_divisible(shape, spec, mesh: Mesh) -> bool:
+    for dim, names in zip(shape, spec):
+        if names is None:
+            continue
+        ns = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([mesh.shape[n] for n in ns]))
+        if dim % size:
+            return False
+    return True
+
+
+def _maybe(spec: P, shape, mesh: Mesh) -> P:
+    """Fall back to replication for any axis that doesn't divide."""
+    out = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            out.append(None)
+            continue
+        ns = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([mesh.shape[n] for n in ns]))
+        out.append(names if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_pspec(path: str, shape, mesh: Mesh, dp, tp) -> P:
+    """PartitionSpec for one parameter, by path substring matching."""
+    nd = len(shape)
+    lead = 1 if "layers" in path and nd >= 2 else 0  # stacked layer dim
+
+    def with_lead(*spec):
+        return _maybe(P(*([None] * lead), *spec), shape, mesh)
+
+    if "embed" in path or "lm_head" in path:
+        return _maybe(P(tp, dp), shape, mesh)
+    if "moe" in path:
+        if "router" in path:
+            return P(*([None] * nd))
+        if path.endswith("w2"):
+            return with_lead(tp, None, dp)
+        if "shared" in path:
+            return with_lead(dp, tp) if path.endswith(("w1", "w3")) \
+                else with_lead(tp, dp)
+        return with_lead(tp, dp, None)          # moe w1/w3 (E, D, F)
+    if "mamba" in path:
+        if "x_proj" in path or "z_proj" in path:
+            return with_lead(dp, tp)       # column-parallel on d_inner
+        if "out_proj" in path:
+            return with_lead(tp, dp)       # row-parallel (psum on exit)
+        if "bc_proj" in path or "dt_proj" in path:
+            return with_lead(dp, None)
+        if "conv_x" in path:
+            return with_lead(None, tp) if nd >= 2 + lead else \
+                with_lead(tp)
+        return P(*([None] * nd))
+    if path.endswith(("wq", "wk", "wv", "w1", "w3")):
+        return with_lead(dp, tp)
+    if path.endswith(("wo", "w2")):
+        return with_lead(tp, dp)
+    return P(*([None] * nd))                    # norms, scalars, biases
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(pp, "key", getattr(pp, "idx", pp))) for pp in path
+    )
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedSharding pytree matching a params (shape) pytree."""
+    from repro.launch.mesh import mesh_axes
+
+    dp, tp = mesh_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0] if dp else None
+
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), leaf.shape, mesh, dp, tp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(opt_state_shape, mesh: Mesh):
+    """Optimizer state: moments inherit param sharding; step replicated."""
+    from repro.launch.mesh import mesh_axes
+
+    dp, tp = mesh_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0] if dp else None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or "step" in ps:
+            return NamedSharding(mesh, P())
+        # moments live under .m / .v with the same sub-path as the param
+        spec = param_pspec(ps, leaf.shape, mesh, dp, tp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    """tokens/targets (B, S) -> batch over dp axes; frames likewise."""
+    from repro.launch.mesh import mesh_axes
+
+    dp, tp = mesh_axes(mesh)
+    dp_t = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        spec = _maybe(P(dp_t), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh):
+    """KV cache (L, B, H, S, D): batch over dp, sequence over model.
+    SSM state (L, B, H, N, P): batch over dp only."""
+    from repro.launch.mesh import mesh_axes
+
+    dp, tp = mesh_axes(mesh)
+    dp_t = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if ps.startswith(("k", "v", "cross")) and leaf.ndim == 5:
+            spec = _maybe(P(None, dp_t, None, tp, None), leaf.shape, mesh)
+        elif ps.startswith(("ssm", "conv")):
+            spec = _maybe(P(None, dp_t), leaf.shape, mesh)
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def logits_sharding(mesh: Mesh):
+    from repro.launch.mesh import mesh_axes
+
+    dp, tp = mesh_axes(mesh)
+    dp_t = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return NamedSharding(mesh, P(dp_t, None, tp))

@@ -1,0 +1,25 @@
+"""Global model-lowering flags.
+
+EXACT_COST_MODE: dry-run-only switch that removes every inner lax.scan
+(plain attention instead of chunked, naive CE, unrolled SSD chunks) so
+XLA ``cost_analysis`` counts all FLOPs exactly — XLA counts a while-loop
+body ONCE regardless of trip count, so scan-based lowerings undercount.
+Never enabled at execution time (the plain paths materialize S x S
+buffers); see launch/dryrun.derive_costs.
+"""
+from __future__ import annotations
+
+import contextlib
+
+EXACT_COST_MODE = False
+
+
+@contextlib.contextmanager
+def exact_cost_mode():
+    global EXACT_COST_MODE
+    prev = EXACT_COST_MODE
+    EXACT_COST_MODE = True
+    try:
+        yield
+    finally:
+        EXACT_COST_MODE = prev

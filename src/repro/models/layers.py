@@ -1,0 +1,395 @@
+"""Foundational model layers — pure JAX, explicit param pytrees.
+
+Every layer is an ``init_*(key, ...) -> params`` plus a pure apply
+function.  The attention apply dispatches between the plain XLA oracle,
+a chunked online-softmax path (memory-safe for 32k+ contexts), and the
+Pallas flash kernel (on TPU runtimes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+Params = Dict[str, jax.Array]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype="float32") -> Params:
+    return {"scale": jnp.ones((dim,), _dtype(dtype))}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)            # (..., S, D/2)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    orig = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding.
+# ---------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, dtype="bfloat16") -> Params:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                  * scale).astype(_dtype(dtype))}
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,df->...f", x, params["w"])
+
+
+def init_embedding(key, vocab: int, dim: int, dtype="bfloat16") -> Params:
+    emb = jax.random.normal(key, (vocab, dim), jnp.float32) * dim ** -0.5
+    return {"table": emb.astype(_dtype(dtype))}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / sliding window / chunked softmax).
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.q_dim, cfg.param_dtype)["w"],
+        "wk": init_dense(ks[1], cfg.d_model, cfg.kv_dim, cfg.param_dtype)["w"],
+        "wv": init_dense(ks[2], cfg.d_model, cfg.kv_dim, cfg.param_dtype)["w"],
+        "wo": init_dense(ks[3], cfg.q_dim, cfg.d_model, cfg.param_dtype)["w"],
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(cfg.d_head)["scale"]
+        p["k_norm"] = init_rmsnorm(cfg.d_head)["scale"]
+    return p
+
+
+def _plain_attention(q, k, v, mask_fn, scale):
+    # q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D)
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = mask_fn(jnp.arange(sq), jnp.arange(skv))
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
+                       kv_chunk: int = 1024):
+    """Double-chunked online-softmax attention.
+
+    Outer scan over q chunks, inner scan over kv chunks: live memory is
+    O(B * H * q_chunk * kv_chunk) regardless of sequence length — this is
+    the OS-anchored dataflow expressed in XLA (the Pallas flash kernel is
+    its TPU-native realization).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+
+    nq = -(-sq // q_chunk)
+    qpad = nq * q_chunk - sq
+    nk = -(-skv // kv_chunk)
+    kpad = nk * kv_chunk - skv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0))) if qpad else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0))) if kpad else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0))) if kpad else v
+
+    qg = qp.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kc = kp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(iq, q_i):
+        q_i = q_i.astype(jnp.float32)                    # (b,hkv,g,qc,d)
+        qpos = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m, l, j = carry
+            kj, vj = inp
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk", q_i,
+                                kj.astype(jnp.float32)) * scale
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            mask = mask_fn(qpos, kpos) & (kpos < skv)[None, :] \
+                & (qpos < sq)[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+            m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(logits - m_safe)
+            p = jnp.where(jnp.isneginf(logits), 0.0, p)
+            alpha = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, m - m_safe))
+            alpha = jnp.where(jnp.isneginf(m), 0.0, alpha)
+            l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+            acc = acc * alpha[..., 0][..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32)
+            )
+            return (acc, m_new, l_new, j + 1), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
+        (acc, m, l, _), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0, 0), (kc, vc)
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype), iq + 1
+
+    def q_scan(carry, q_i):
+        iq = carry
+        out_i, iq = q_step(iq, q_i)
+        return iq, out_i
+
+    # flash-style recompute: neither scan saves its probability matrices
+    _, outs = jax.lax.scan(jax.checkpoint(q_scan), 0, qg)  # (nq,b,hkv,g,qc,d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nq * q_chunk, d)
+    return out[:, :, :sq]
+
+
+def bidir_attention(q, k, v, scale, chunked_threshold: int = 2048):
+    """Non-causal attention (encoder / cross) with chunked dispatch."""
+    mask_fn = lambda qp, kp: jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    if k.shape[2] > chunked_threshold and not flags.EXACT_COST_MODE:
+        return _chunked_attention(q, k, v, mask_fn, scale)
+    return _plain_attention(q, k, v, mask_fn, scale)
+
+
+def _banded_swa_attention(q, k, v, window: int, scale):
+    """Causal sliding-window attention via static banding.
+
+    Keys are blocked at the window size; each q block attends to its own
+    and the previous key block (2w keys) — O(S * 2w * d) compute instead
+    of the O(S^2 * d) a masked full attention spends.  Requires a STATIC
+    window, self-attention (q/kv same positions), no cache.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    w = int(window)
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qb = q.reshape(b, hkv, g, nb, w, d)
+    kb = k.reshape(b, hkv, nb, w, d)
+    vb = v.reshape(b, hkv, nb, w, d)
+    k_prev = jnp.roll(kb, 1, axis=2)
+    v_prev = jnp.roll(vb, 1, axis=2)
+    kband = jnp.concatenate([k_prev, kb], axis=3)        # (b,hkv,nb,2w,d)
+    vband = jnp.concatenate([v_prev, vb], axis=3)
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w                 # relative
+    band_mask = (kpos <= qpos) & (kpos > qpos - w)        # (w, 2w)
+    first_mask = band_mask & (kpos >= 0)                  # block 0: no wrap
+
+    def one_block(q_i, k_i, v_i, m_i):
+        # q_i (b,hkv,g,w,d); k_i/v_i (b,hkv,2w,d); m_i (w,2w)
+        lg = jnp.einsum("bhgqd,bhkd->bhgqk", q_i.astype(jnp.float32),
+                        k_i.astype(jnp.float32)) * scale
+        lg = jnp.where(m_i[None, None, None], lg, -jnp.inf)
+        p = jax.nn.softmax(lg, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", p, v_i.astype(jnp.float32))
+
+    if flags.EXACT_COST_MODE:
+        # vectorized over blocks (exact flop accounting; memory unused)
+        is_first = (jnp.arange(nb) == 0)[:, None, None]
+        mask = jnp.where(is_first, first_mask[None], band_mask[None])
+        out = jax.vmap(one_block, in_axes=(3, 2, 2, 0), out_axes=3)(
+            qb, kband, vband, mask)
+        out = out.reshape(b, hq, nb * w, d)[:, :, :s]
+        return out.astype(q.dtype)
+
+    # runtime: scan over blocks — live memory O(b*h*w*2w)
+    masks = jnp.where((jnp.arange(nb) == 0)[:, None, None],
+                      first_mask[None], band_mask[None])
+
+    def step(_, inp):
+        q_i, k_i, v_i, m_i = inp
+        return None, one_block(q_i, k_i, v_i, m_i)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(step), None,
+        (qb.transpose(3, 0, 1, 2, 4, 5),
+         kband.transpose(2, 0, 1, 3, 4),
+         vband.transpose(2, 0, 1, 3, 4), masks),
+    )                                                     # (nb,b,hkv,g,w,d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nb * w, d)
+    return out[:, :, :s].astype(q.dtype)
+
+
+def _quantize_kv(x):
+    """Symmetric per-(batch, head, position) int8 quantization of K/V."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,                 # (B, S, D_model)
+    cfg,
+    positions: Optional[jax.Array] = None,
+    window: Optional[jax.Array] = None,   # traced or static window length
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    chunked_threshold: int = 2048,
+    attend_local: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """GQA self-attention. Returns (out, new_kv_cache).
+
+    ``attend_local``: update the cache but attend over the freshly
+    projected K/V (prefill-from-zero: identical math, enables the
+    static banded-SWA path and avoids attending over the padded cache).
+    """
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None], cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache[0], kv_cache[1]   # (B, Hkv, S_max, Dh) [+ scales]
+        int8_kv = ck.dtype == jnp.int8
+        if int8_kv:
+            k_store, k_scale = _quantize_kv(k)
+            v_store, v_scale = _quantize_kv(v)
+        else:
+            k_store, v_store = k.astype(ck.dtype), v.astype(cv.dtype)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k_store, cache_index, axis=2
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v_store, cache_index, axis=2
+        )
+        if int8_kv:
+            cks, cvs = kv_cache[2], kv_cache[3]
+            cks = jax.lax.dynamic_update_slice_in_dim(
+                cks, k_scale, cache_index, axis=2)
+            cvs = jax.lax.dynamic_update_slice_in_dim(
+                cvs, v_scale, cache_index, axis=2)
+            new_cache = (ck, cv, cks, cvs)
+        else:
+            new_cache = (ck, cv)
+        if attend_local:
+            kv_len = None            # attend over the local projections
+        else:
+            if int8_kv:
+                k = (ck.astype(jnp.float32) * new_cache[2]).astype(q.dtype)
+                v = (cv.astype(jnp.float32) * new_cache[3]).astype(q.dtype)
+            else:
+                k, v = ck, cv
+            kv_len = cache_index + s     # traced valid length
+    else:
+        kv_len = None
+
+    scale = dh ** -0.5
+    qpos_off = (cache_index if cache_index is not None
+                and not attend_local else 0)
+
+    def mask_fn(qpos, kpos):
+        qp = (qpos + qpos_off)[:, None]
+        kp = kpos[None, :]
+        m = kp <= qp
+        if kv_len is not None:
+            m &= kp < kv_len
+        if window is not None:
+            m &= kp > qp - window
+        return m
+
+    skv = k.shape[2]
+    use_chunked = skv > chunked_threshold and not flags.EXACT_COST_MODE
+    static_window = (
+        window is not None and isinstance(window, (int,))
+        and (kv_cache is None or attend_local)
+        and s == skv and s > 2 * int(window)
+    )
+    if cfg.use_pallas_kernels and jax.default_backend() == "tpu" \
+            and kv_cache is None and window is None:
+        from repro.kernels import ops as kops
+
+        out = kops.attention(
+            q, k, v, causal=True,
+            window=None, backend="pallas",
+        )
+    elif static_window:
+        # static sliding window: banded computation, O(S*2w*d)
+        out = _banded_swa_attention(q, k, v, int(window), scale)
+    elif use_chunked:
+        out = _chunked_attention(q, k, v, mask_fn, scale)
+    else:
+        out = _plain_attention(q, k, v, mask_fn, scale)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP.
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype="bfloat16") -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": init_dense(k1, d_model, d_ff, dtype)["w"],   # gate
+        "w3": init_dense(k2, d_model, d_ff, dtype)["w"],   # up
+        "w2": init_dense(k3, d_ff, d_model, dtype)["w"],   # down
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w1"]))
+    up = jnp.einsum("...d,df->...f", x, p["w3"])
+    return jnp.einsum("...f,fd->...d", gate * up, p["w2"])

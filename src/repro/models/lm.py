@@ -1,0 +1,608 @@
+"""Generic LM assembly: one model function covering every assigned family.
+
+Families (configs/base.ArchConfig.family):
+  dense / vlm : pre-norm attention + SwiGLU           (llama-like; chameleon
+                is early-fusion so VQ image tokens are ordinary vocab ids)
+  moe         : attention + routed MoE (+ shared experts)
+  ssm         : mamba2 SSD blocks only (attention-free)
+  hybrid      : parallel attention + SSM heads per layer (hymba-style),
+                SWA except a few full-attention layers
+  audio       : whisper-style encoder-decoder; conv frontend stubbed —
+                inputs are precomputed frame embeddings
+
+Implementation notes:
+  * params are stacked per-layer (vmap init) and consumed by lax.scan —
+    compile time stays flat in depth (94-layer configs lower in seconds);
+  * remat policy wraps the scan body (configurable);
+  * decode carries a KV cache / SSM state pytree through the same scan;
+  * MoE uses the shard_map EP path when a ``Dist`` is provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags, layers, moe as moe_lib, ssm as ssm_lib
+
+Params = Dict[str, Any]
+FULL_WINDOW = jnp.int32(2 ** 30)   # sentinel: sliding window covering all
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded into the model (None = single device)."""
+
+    mesh: Any
+    dp_axes: Tuple[str, ...]   # batch axes, e.g. ("pod", "data")
+    tp_axis: str               # tensor/expert-parallel axis
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": layers.init_rmsnorm(cfg.d_model)["scale"]}
+    if cfg.has_attention:
+        p["attn"] = layers.init_attention(ks[0], cfg)
+    if cfg.has_ssm:
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg)
+    if cfg.n_experts:
+        p["ln2"] = layers.init_rmsnorm(cfg.d_model)["scale"]
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    elif cfg.d_ff and cfg.family != "ssm":
+        p["ln2"] = layers.init_rmsnorm(cfg.d_model)["scale"]
+        p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                   cfg.param_dtype)
+    if cfg.is_encoder_decoder:
+        p["ln_cross"] = layers.init_rmsnorm(cfg.d_model)["scale"]
+        p["cross"] = layers.init_attention(ks[4], cfg)
+    return p
+
+
+def _init_enc_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model)["scale"],
+        "attn": layers.init_attention(ks[0], cfg),
+        "ln2": layers.init_rmsnorm(cfg.d_model)["scale"],
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_model(cfg, key) -> Params:
+    k_emb, k_layers, k_enc, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params: Params = {
+        "embed": layers.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model,
+                                       cfg.param_dtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": layers.init_rmsnorm(cfg.d_model)["scale"],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_embedding(
+            k_head, cfg.padded_vocab, cfg.d_model, cfg.param_dtype
+        )
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+            "final_norm": layers.init_rmsnorm(cfg.d_model)["scale"],
+        }
+    return params
+
+
+def layer_windows(cfg) -> Optional[jax.Array]:
+    """Per-layer sliding windows as a scannable array (hybrid archs)."""
+    if cfg.attn_window is None:
+        return None
+    ws = [cfg.layer_window(i) for i in range(cfg.n_layers)]
+    return jnp.asarray(
+        [FULL_WINDOW if w is None else w for w in ws], jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer application.
+# ---------------------------------------------------------------------------
+def _cross_attention(p, x, enc_out, cfg):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,df->bsf", enc_out, p["wk"]).reshape(
+        b, enc_out.shape[1], hkv, dh)
+    v = jnp.einsum("bsd,df->bsf", enc_out, p["wv"]).reshape(
+        b, enc_out.shape[1], hkv, dh)
+    if cfg.qk_norm:
+        q = layers.rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = layers.rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    out = layers.bidir_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), scale=dh ** -0.5,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def layer_apply(
+    lp: Params, x: jax.Array, cfg, *,
+    window: Optional[jax.Array],
+    positions: Optional[jax.Array],
+    cache: Optional[Params],
+    cache_index: Optional[jax.Array],
+    enc_out: Optional[jax.Array],
+    dist: Optional[Dist],
+    attend_local: bool = False,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """One decoder layer. Returns (x, new_cache_slice, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    if dist is not None:
+        # re-pin batch sharding: SPMD propagation can drop it through the
+        # SSD reshapes/transposes (observed: replicated mamba activations).
+        # §Perf iteration 3: for attention-only archs the residual stream
+        # is sequence-sharded over the TP axis (Megatron-SP): RMSNorm is
+        # per-token (no comm), the MoE boundary gather disappears, and
+        # row-parallel all-reduces lower to half-cost reduce-scatters.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tp = dist.mesh.shape[dist.tp_axis]
+        seq_ok = (not cfg.has_ssm) and x.shape[1] % tp == 0             and x.shape[1] >= tp
+        spec = P(dist.dp_axes, dist.tp_axis if seq_ok else None, None)
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(dist.mesh, spec))
+    h = layers.rmsnorm({"scale": lp["ln1"]}, x, cfg.norm_eps)
+
+    mix = jnp.zeros_like(x)
+    n_paths = 0
+    if cfg.has_attention:
+        kv = None
+        if cache is not None:
+            kv = (cache["k"], cache["v"])
+            if "k_scale" in cache:
+                kv = kv + (cache["k_scale"], cache["v_scale"])
+        attn_out, new_kv = layers.attention_apply(
+            lp["attn"], h, cfg, positions=positions, window=window,
+            kv_cache=kv, cache_index=cache_index, attend_local=attend_local,
+        )
+        mix = mix + attn_out
+        n_paths += 1
+        if new_kv is not None:
+            new_cache["k"], new_cache["v"] = new_kv[:2]
+            if len(new_kv) == 4:
+                new_cache["k_scale"], new_cache["v_scale"] = new_kv[2:]
+    if cfg.has_ssm:
+        state = (cache["ssm"], cache["conv"]) if cache is not None else None
+        ssm_out, new_state = ssm_lib.mamba_apply(lp["mamba"], h, cfg, state)
+        mix = mix + ssm_out
+        n_paths += 1
+        if new_state is not None:
+            new_cache["ssm"], new_cache["conv"] = new_state
+    x = x + mix / max(n_paths, 1)
+
+    if cfg.is_encoder_decoder and enc_out is not None:
+        hc = layers.rmsnorm({"scale": lp["ln_cross"]}, x, cfg.norm_eps)
+        x = x + _cross_attention(lp["cross"], hc, enc_out, cfg)
+        if cache is not None:
+            # store per-layer cross KV for cached decode
+            b, se, _ = enc_out.shape
+            hkv, dh = cfg.n_kv_heads, cfg.d_head
+            ck = jnp.einsum("bsd,df->bsf", enc_out, lp["cross"]["wk"])
+            cv = jnp.einsum("bsd,df->bsf", enc_out, lp["cross"]["wv"])
+            new_cache["cross_k"] = ck.reshape(b, se, hkv, dh).transpose(
+                0, 2, 1, 3).astype(cache["cross_k"].dtype)
+            new_cache["cross_v"] = cv.reshape(b, se, hkv, dh).transpose(
+                0, 2, 1, 3).astype(cache["cross_v"].dtype)
+    elif cfg.is_encoder_decoder and cache is not None and "cross_k" in cache:
+        # decode: cross-attend to the cached encoder projections
+        hc = layers.rmsnorm({"scale": lp["ln_cross"]}, x, cfg.norm_eps)
+        b, s, _ = hc.shape
+        h_, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = jnp.einsum("bsd,df->bsf", hc, lp["cross"]["wq"]).reshape(
+            b, s, h_, dh).transpose(0, 2, 1, 3)
+        out = layers.bidir_attention(
+            q, cache["cross_k"], cache["cross_v"], scale=dh ** -0.5,
+        ).transpose(0, 2, 1, 3).reshape(b, s, h_ * dh)
+        x = x + jnp.einsum("bsf,fd->bsd", out, lp["cross"]["wo"])
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+
+    if cfg.n_experts:
+        h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
+        if dist is not None:
+            y, aux = moe_lib.moe_apply_sharded(
+                lp["moe"], h2, cfg, dist.mesh, dist.dp_axes, dist.tp_axis
+            )
+        else:
+            y, aux = moe_lib.moe_apply(lp["moe"], h2, cfg)
+        x = x + y
+    elif "mlp" in lp:
+        h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
+        x = x + layers.mlp_apply(lp["mlp"], h2)
+
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper).
+# ---------------------------------------------------------------------------
+def encode(params: Params, frames: jax.Array, cfg) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings (stub
+    frontend per the assignment)."""
+    enc = params["encoder"]
+
+    def body(x, lp):
+        h = layers.rmsnorm({"scale": lp["ln1"]}, x, cfg.norm_eps)
+        # bidirectional self-attention (no causal mask)
+        b, s, _ = h.shape
+        hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = jnp.einsum("bsd,df->bsf", h, lp["attn"]["wq"]).reshape(
+            b, s, hh, dh).transpose(0, 2, 1, 3)
+        k = jnp.einsum("bsd,df->bsf", h, lp["attn"]["wk"]).reshape(
+            b, s, hkv, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,df->bsf", h, lp["attn"]["wv"]).reshape(
+            b, s, hkv, dh).transpose(0, 2, 1, 3)
+        pos = jnp.arange(s)[None, :]
+        q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+        out = layers.bidir_attention(
+            q, k, v, scale=dh ** -0.5,
+        ).transpose(0, 2, 1, 3).reshape(b, s, hh * dh)
+        x = x + jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"])
+        h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
+        x = x + layers.mlp_apply(lp["mlp"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(
+        body if flags.EXACT_COST_MODE else jax.checkpoint(body),
+        frames.astype(jnp.dtype(cfg.act_dtype)), enc["layers"],
+        unroll=cfg.n_enc_layers if flags.EXACT_COST_MODE else 1,
+    )
+    return layers.rmsnorm({"scale": enc["final_norm"]}, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill).
+# ---------------------------------------------------------------------------
+def forward(
+    params: Params,
+    tokens: jax.Array,                 # (B, S)
+    cfg,
+    enc_frames: Optional[jax.Array] = None,
+    dist: Optional[Dist] = None,
+    remat: str = "dots",               # "none" | "dots" | "full"
+    unroll: int = 1,                   # scan unroll (dry-run FLOP accounting)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), total moe aux loss)."""
+    x, aux = forward_hidden(params, tokens, cfg, enc_frames=enc_frames,
+                            dist=dist, remat=remat, unroll=unroll)
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x)
+    if dist is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(dist.mesh, P(dist.dp_axes, None,
+                                               dist.tp_axis))
+        )
+    return logits, aux
+
+
+def forward_hidden(
+    params: Params,
+    tokens: jax.Array,                 # (B, S)
+    cfg,
+    enc_frames: Optional[jax.Array] = None,
+    dist: Optional[Dist] = None,
+    remat: str = "dots",
+    unroll: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """forward() minus the unembedding: (final hidden (B,S,D), aux loss)."""
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    if dist is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(dist.mesh, P(dist.dp_axes, None, None))
+        )
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        if enc_frames is None:
+            raise ValueError("enc-dec arch requires enc_frames")
+        enc_out = encode(params, enc_frames, cfg)
+
+    windows = layer_windows(cfg)
+    # exact-cost mode with a uniform window: pass the window statically so
+    # the banded SWA path (O(S*2w)) is used and FLOPs are counted honestly
+    static_window = None
+    if flags.EXACT_COST_MODE and cfg.attn_window is not None             and cfg.full_attn_every == 0:
+        windows = None
+        static_window = int(cfg.attn_window)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def make_body(window_static):
+        def body(x, scanned):
+            lp = scanned["lp"]
+            window = scanned.get("window", window_static)
+            x, _, aux = layer_apply(
+                lp, x, cfg, window=window, positions=positions, cache=None,
+                cache_index=None, enc_out=enc_out, dist=dist,
+            )
+            return x, aux
+        if remat == "dots":
+            return jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        if remat == "full":
+            return jax.checkpoint(body)
+        return body
+
+    if windows is not None and cfg.full_attn_every \
+            and not flags.EXACT_COST_MODE:
+        # §Perf iteration 1 (hymba): segment the stack into runs of
+        # same-window layers so SWA layers take the STATIC banded path —
+        # O(S*2w) attention instead of masked O(S^2) under a traced window.
+        aux_total = jnp.zeros((), jnp.float32)
+        for start, end, win in _window_segments(cfg):
+            seg = jax.tree.map(lambda a: a[start:end], params["layers"])
+            body = make_body(win)
+            x, auxes = jax.lax.scan(body, x, {"lp": seg}, unroll=unroll)
+            aux_total = aux_total + jnp.sum(auxes)
+        x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+        return x, aux_total
+
+    body = make_body(static_window)
+    scanned = {"lp": params["layers"]}
+    if windows is not None:
+        scanned["window"] = windows
+    x, auxes = jax.lax.scan(body, x, scanned, unroll=unroll)
+
+    x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def _window_segments(cfg):
+    """Contiguous (start, end, static_window) runs of same-window layers."""
+    segs = []
+    cur_win = cfg.layer_window(0)
+    start = 0
+    for i in range(1, cfg.n_layers):
+        w = cfg.layer_window(i)
+        if w != cur_win:
+            segs.append((start, i, cur_win))
+            start, cur_win = i, w
+    segs.append((start, cfg.n_layers, cur_win))
+    return segs
+
+
+def chunked_cross_entropy(
+    x: jax.Array,            # (B, S, D) final hidden states
+    table: jax.Array,        # (Vp, D) unembedding
+    targets: jax.Array,      # (B, S)
+    cfg,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Sequence-chunked CE: logits are computed per chunk and never
+    materialized at (B, S, V) f32 — the naive loss's logit copies cost
+    ~10 GB/device at (1M tokens x 150k vocab); this keeps live memory at
+    O(B * chunk * V_shard) and recomputes chunk logits in backward."""
+    b, s, d = x.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    xc = x.reshape(b, nc, -1, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, -1).transpose(1, 0, 2)
+    valid_tok = (jnp.arange(nc * xc.shape[2]) < s).reshape(nc, -1)
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+    def body(total, inp):
+        x_i, t_i, ok = inp
+        logits = jnp.einsum("bcd,vd->bcv", x_i, table).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            logits = jnp.where(vmask, logits, -jnp.inf)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_i[..., None], axis=-1)[..., 0]
+        nll = jnp.where(ok[None, :], logz - gold, 0.0)
+        return total + nll.sum(), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.zeros((), jnp.float32),
+        (xc, tc, valid_tok),
+    )
+    return total / (b * s)
+
+
+def loss_fn(
+    params: Params, batch: Dict[str, jax.Array], cfg,
+    dist: Optional[Dist] = None, remat: str = "dots",
+    aux_weight: float = 0.01, unroll: int = 1,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, aux = forward_hidden(
+        params, batch["tokens"], cfg,
+        enc_frames=batch.get("enc_frames"), dist=dist, remat=remat,
+        unroll=unroll,
+    )
+    head = params.get("lm_head", params["embed"])
+    if flags.EXACT_COST_MODE:
+        logits = layers.unembed(head, x).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(valid, logits, -jnp.inf)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, batch["targets"][..., None], axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+    else:
+        nll = chunked_cross_entropy(x, head["table"], batch["targets"], cfg)
+    total = nll + aux_weight * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode.
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype="bfloat16",
+               enc_len: int = None) -> Params:
+    cache: Params = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.d_head)
+        kv_dt = jnp.dtype(dtype if cfg.kv_cache_dtype == "auto"
+                          else cfg.kv_cache_dtype)
+        cache["k"] = jnp.zeros(shape, kv_dt)
+        cache["v"] = jnp.zeros(shape, kv_dt)
+        if kv_dt == jnp.int8:
+            sshape = shape[:-1] + (1,)
+            cache["k_scale"] = jnp.ones(sshape, jnp.float32)
+            cache["v_scale"] = jnp.ones(sshape, jnp.float32)
+    if cfg.has_ssm:
+        s, tail = ssm_lib.init_ssm_state(cfg, batch)
+        cache["ssm"] = jnp.zeros((cfg.n_layers,) + s.shape, s.dtype)
+        cache["conv"] = jnp.zeros((cfg.n_layers,) + tail.shape, tail.dtype)
+    if cfg.is_encoder_decoder:
+        # cross-attention KV computed at prefill from encoder output
+        el = enc_len if enc_len is not None else max_len
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, el, cfg.d_head)
+        cache["cross_k"] = jnp.zeros(shape, jnp.dtype(dtype))
+        cache["cross_v"] = jnp.zeros(shape, jnp.dtype(dtype))
+    return cache
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    tokens: jax.Array,            # (B, 1)
+    cfg,
+    dist: Optional[Dist] = None,
+    unroll: int = 1,
+) -> Tuple[jax.Array, Params]:
+    """One decode step with the KV/SSM cache. Returns (logits (B, V), cache).
+
+    Uniform-position batch (all sequences share cache['index']).
+    """
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    idx = cache["index"]
+    positions = jnp.full((tokens.shape[0], 1), idx, jnp.int32)
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp = scanned["lp"]
+        layer_cache = scanned["cache"]
+        window = scanned.get("window")
+        x, new_cache, _ = layer_apply(
+            lp, x, cfg, window=window, positions=positions,
+            cache=layer_cache, cache_index=idx,
+            enc_out=None, dist=dist,
+        )
+        return x, new_cache
+
+    scanned = {"lp": params["layers"],
+               "cache": {k: cache[k] for k in
+                         ("k", "v", "k_scale", "v_scale", "ssm", "conv",
+                          "cross_k", "cross_v")
+                         if k in cache}}
+    if windows is not None:
+        scanned["window"] = windows
+    x, new_layer_caches = jax.lax.scan(body, x, scanned, unroll=unroll)
+
+    for k, v in new_layer_caches.items():
+        cache[k] = v
+    cache["index"] = idx + 1
+
+    x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x[:, -1])
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -jnp.inf)
+    return logits, cache
+
+
+def prefill(
+    params: Params, tokens: jax.Array, cfg,
+    max_len: Optional[int] = None,
+    enc_frames: Optional[jax.Array] = None,
+    dist: Optional[Dist] = None,
+    unroll: int = 1,
+) -> Tuple[jax.Array, Params]:
+    """Run the prompt through the model, filling the cache.
+
+    Attention during prefill runs over the *local* K/V projections
+    (``attend_local``) while writing the cache — identical math to
+    attending over the just-filled cache, but it keeps the static
+    banded-SWA path available and avoids touching the padded cache
+    buffer (max_len) in the attention einsums.
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        if enc_frames is None:
+            raise ValueError("enc-dec arch requires enc_frames")
+        enc_out = encode(params, enc_frames, cfg)
+    cache = init_cache(cfg, b, max_len, cfg.act_dtype,
+                       enc_len=(enc_out.shape[1] if enc_out is not None
+                                else None))
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    if dist is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(dist.mesh, P(dist.dp_axes, None, None)))
+    windows = layer_windows(cfg)
+    static_window = None
+    if flags.EXACT_COST_MODE and cfg.attn_window is not None \
+            and cfg.full_attn_every == 0:
+        windows = None
+        static_window = int(cfg.attn_window)
+    positions = jnp.arange(s)[None, :]
+    idx0 = jnp.zeros((), jnp.int32)
+
+    def make_body(window_static):
+        def body(x, scanned):
+            lp = scanned["lp"]
+            layer_cache = scanned["cache"]
+            window = scanned.get("window", window_static)
+            x, new_cache, _ = layer_apply(
+                lp, x, cfg, window=window, positions=positions,
+                cache=layer_cache, cache_index=idx0, enc_out=enc_out,
+                dist=dist, attend_local=True,
+            )
+            return x, new_cache
+        return body
+
+    cache_keys = [k for k in ("k", "v", "k_scale", "v_scale", "ssm",
+                              "conv", "cross_k", "cross_v") if k in cache]
+    if windows is not None and cfg.full_attn_every \
+            and not flags.EXACT_COST_MODE:
+        # segmented SWA prefill (see forward_hidden §Perf iteration 1)
+        new_caches = {k: [] for k in cache_keys}
+        for start, end, win in _window_segments(cfg):
+            seg = {
+                "lp": jax.tree.map(lambda a: a[start:end], params["layers"]),
+                "cache": {k: cache[k][start:end] for k in cache_keys},
+            }
+            x, seg_caches = jax.lax.scan(make_body(win), x, seg,
+                                         unroll=unroll)
+            for k in cache_keys:
+                new_caches[k].append(seg_caches[k])
+        for k in cache_keys:
+            cache[k] = jnp.concatenate(new_caches[k], axis=0)
+    else:
+        scanned = {"lp": params["layers"],
+                   "cache": {k: cache[k] for k in cache_keys}}
+        if windows is not None:
+            scanned["window"] = windows
+        x, new_layer_caches = jax.lax.scan(make_body(static_window), x,
+                                           scanned, unroll=unroll)
+        for k, v in new_layer_caches.items():
+            cache[k] = v
+    cache["index"] = jnp.asarray(s, jnp.int32)
+    x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x[:, -1])
+    return logits, cache

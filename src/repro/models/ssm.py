@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD: intra-chunk attention-like matmuls + inter-chunk state
+recurrence (lax.scan).  The chunk GEMMs are the MXU-friendly face of the
+SSM — they are where the paper's OS-anchored dataflow applies (see
+DESIGN.md §4: for attention-free archs the dataflow technique lands on
+the SSD chunk GEMMs instead of attention).
+
+Projections are kept SEPARATE per role (z/x/BC/dt) rather than fused —
+§Perf iteration 2: separate tensors let the x/z projections shard over
+the TP axis (column-parallel on d_inner, row-parallel out_proj), so SSD
+compute spreads over the ``model`` axis instead of replicating.  The
+headdim axis P (= d_inner per head) stays outer in every SSD einsum, so
+a d_inner sharding is consistent end-to-end.
+
+Decode maintains an O(1) recurrent state (B, H, N, P) + conv tails.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags, layers
+
+Params = Dict[str, jax.Array]
+
+
+def init_mamba(key, cfg) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    g = 1  # single B/C group
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "z_proj": layers.init_dense(ks[0], d, di, cfg.param_dtype)["w"],
+        "x_proj": layers.init_dense(ks[1], d, di, cfg.param_dtype)["w"],
+        "bc_proj": layers.init_dense(ks[2], d, 2 * g * n,
+                                     cfg.param_dtype)["w"],
+        "dt_proj": layers.init_dense(ks[3], d, h, cfg.param_dtype)["w"],
+        "conv_x_w": (jax.random.normal(ks[4], (cfg.ssm_conv, di),
+                                       jnp.float32) * 0.1).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (cfg.ssm_conv, 2 * g * n),
+                                        jnp.float32) * 0.1).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dt),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.init_rmsnorm(di)["scale"],
+        "out_proj": layers.init_dense(ks[0], di, d, cfg.param_dtype)["w"],
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x: (B, L, C); w: (K, C). Returns (y, tail)."""
+    k = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_tail = xp[:, -(k - 1):, :] if k > 1 else None
+    return y + b[None, None, :], new_tail
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """Chunked SSD: one lax.scan over chunks carrying the (B,H,N,P) state.
+
+    Per-chunk work is matmul-rich (the SSD duality): an intra-chunk
+    attention-like (Q x Q) einsum + state update, with live memory
+    O(B*Q*Q*H) per step instead of O(B*L/Q*Q*Q*H) for the fully
+    vectorized form (which is ~GBs/device at 32k prefill).
+
+    xh: (B, L, H, P); dt: (B, L, H); a: (H,) negative;
+    bmat/cmat: (B, L, N). Returns (y (B,L,H,P), final_state (B,H,N,P)).
+    """
+    bsz, l, h, pdim = xh.shape
+    n = bmat.shape[-1]
+    nc = l // chunk
+    q = chunk
+    f32 = jnp.float32
+
+    xh_c = xh.reshape(bsz, nc, q, h, pdim).transpose(1, 0, 2, 3, 4)
+    dt_c = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3).astype(f32)
+    b_c = bmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3).astype(f32)
+    c_c = cmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3).astype(f32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(s_prev, inp):
+        x_k, dt_k, b_k, c_k = inp          # (B,Q,H,P),(B,Q,H),(B,Q,N)x2
+        x_k = x_k.astype(f32)
+        da = dt_k * a[None, None, :]       # (B,Q,H) negative
+        cum = jnp.cumsum(da, axis=1)       # inclusive
+        seg = cum[:, -1, :]                # (B,H)
+
+        # intra-chunk: y_i = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Qi,Qj,H)
+        # zero masked entries BEFORE exp: j>i gives diff>0 which can
+        # overflow to inf, and inf*0 in the VJP poisons grads with NaN
+        diff = jnp.where(mask[None, :, :, None], diff, 0.0)
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_k, b_k)       # (B,Qi,Qj)
+        w = scores[..., None] * lmat * dt_k[:, None, :, :]  # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, x_k)
+
+        # inter-chunk: y_i += C_i exp(cum_i) @ S_prev
+        decay_from_start = jnp.exp(cum)                     # (B,Q,H)
+        y_inter = jnp.einsum(
+            "bqn,bqh,bhnp->bqhp", c_k, decay_from_start, s_prev
+        )
+
+        # state update: S = exp(seg) S_prev + sum_j exp(seg - cum_j) dt_j B_j x_j
+        decay_to_end = jnp.exp(seg[:, None, :] - cum)       # (B,Q,H)
+        s_local = jnp.einsum(
+            "bqn,bqh,bqhp->bhnp", b_k, dt_k * decay_to_end, x_k
+        )
+        s_new = s_prev * jnp.exp(seg)[:, :, None, None] + s_local
+        return s_new, (y_intra + y_inter).astype(xh.dtype)
+
+    s0 = jnp.zeros((bsz, h, n, pdim), f32)
+    s_final, y_c = jax.lax.scan(step, s0, (xh_c, dt_c, b_c, c_c),
+                                unroll=nc if flags.EXACT_COST_MODE else 1)
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, pdim).astype(f32)
+    return y, s_final
+
+
+def mamba_apply(
+    p: Params, x: jax.Array, cfg,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Mamba2 block. x: (B, L, D).
+
+    ``state`` = (ssm_state (B,H,N,P), conv_tail (B, K-1, di + 2n)) enables
+    recurrent decode (L small, typically 1).
+    """
+    bsz, l, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    g = 1
+
+    z = jnp.einsum("bld,de->ble", x, p["z_proj"])
+    xin = jnp.einsum("bld,de->ble", x, p["x_proj"])
+    bc = jnp.einsum("bld,de->ble", x, p["bc_proj"])
+    dt = jnp.einsum("bld,de->ble", x, p["dt_proj"])
+
+    tail = state[1] if state is not None else None
+    tail_x = tail[:, :, :di] if tail is not None else None
+    tail_bc = tail[:, :, di:] if tail is not None else None
+    xin, new_tail_x = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"], tail_x)
+    bc, new_tail_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                   tail_bc)
+    xin = jax.nn.silu(xin)
+    bc = jax.nn.silu(bc)
+    bmat, cmat = jnp.split(bc, [g * n], axis=-1)
+    new_tail = (jnp.concatenate([new_tail_x, new_tail_bc], axis=-1)
+                if new_tail_x is not None else None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])     # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                # (H,) < 0
+    # p-major head layout: d_inner column j feeds (p=j//H, h=j%H), so a
+    # TP sharding of d_inner maps to whole P-rows and propagates through
+    # the reshape (headdim-sharded SSD; §Perf iteration 2)
+    xh = xin.reshape(bsz, l, pdim, h).transpose(0, 1, 3, 2)
+
+    if state is None:
+        pad = (-l) % cfg.ssm_chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+        y, s_final = _ssd_chunked(xh_p, dt_p, a, b_p, c_p, cfg.ssm_chunk)
+        y = y[:, :l]
+        new_state = None if state is None else (s_final, new_tail)
+    else:
+        # recurrent decode: per-token state update
+        s = state[0].astype(jnp.float32)                    # (B,H,N,P)
+
+        def step(s_prev, inp):
+            x_t, dt_t, b_t, c_t = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+            da = jnp.exp(dt_t * a[None, :])                 # (B,H)
+            s_new = s_prev * da[:, :, None, None] + jnp.einsum(
+                "bn,bh,bhp->bhnp", b_t, dt_t, x_t
+            )
+            y_t = jnp.einsum("bn,bhnp->bhp", c_t, s_new)
+            return s_new, y_t
+
+        s_final, ys = jax.lax.scan(
+            step, s,
+            (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+             bmat.astype(jnp.float32).transpose(1, 0, 2),
+             cmat.astype(jnp.float32).transpose(1, 0, 2)),
+        )
+        y = ys.transpose(1, 0, 2, 3)                        # (B,L,H,P)
+        new_state = (s_final, new_tail)
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.transpose(0, 1, 3, 2).reshape(bsz, l, di).astype(x.dtype)
+    y = layers.rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int):
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return (
+        jnp.zeros((batch, h, n, pdim), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+    )

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay, fp32 moments, global-norm clipping.
+
+Pure-JAX (no optax).  Moments are kept in fp32 regardless of the param
+dtype; the update is computed in fp32 and cast back — the standard
+mixed-precision arrangement for bf16 params.  The optimizer state inherits
+the parameter sharding (ZeRO-1 falls out of the sharding rules in
+launch/sharding.py, which shard moments over the data axis too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    m: Any                   # pytree like params (fp32)
+    v: Any                   # pytree like params (fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # bf16 moments halve optimizer HBM — the standard lever for >100B
+    # models on 16 GB/chip parts (update math stays fp32).
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr_fn(state.step)
+
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mh, vh = m / bc1, v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        new = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([n[0] for n in new])
+        new_m = treedef.unflatten([n[1] for n in new])
+        new_v = treedef.unflatten([n[2] for n in new])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step, new_m, new_v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

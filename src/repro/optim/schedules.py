@@ -1,0 +1,39 @@
+"""Learning-rate schedules (pure functions of the step).
+
+Includes WSD (warmup-stable-decay) — the schedule MiniCPM trains with —
+plus cosine and linear-warmup helpers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    step = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def wsd(step, warmup_steps: int, stable_steps: int, decay_steps: int,
+        peak: float, floor: float = 0.0):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * (step + 1) / max(warmup_steps, 1)
+    decay_frac = (step - warmup_steps - stable_steps) / max(decay_steps, 1)
+    decay = peak * jnp.exp(-decay_frac * 5.0)  # fast exponential anneal
+    lr = jnp.where(
+        step < warmup_steps, warm,
+        jnp.where(step < warmup_steps + stable_steps, peak,
+                  jnp.maximum(decay, floor)),
+    )
+    return lr
+
+
+def cosine(step, warmup_steps: int, total_steps: int, peak: float,
+           floor_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * (step + 1) / max(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak * (floor_ratio + (1 - floor_ratio) * 0.5 *
+                  (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,135 @@
+"""Fault-tolerant training driver: checkpoint-restart + health monitoring.
+
+The driver owns the full loop: data (stateless, step-addressed), train
+step (jit), periodic async checkpoints, heartbeat/straggler monitoring,
+and the failure-injection hook.  ``run(resume=True)`` after a crash
+restores the latest checkpoint and continues bit-exactly (the dataset is
+a pure function of (seed, step), so no iterator state is persisted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models import lm
+from repro.optim import AdamW, schedules
+from repro.runtime import health
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainJobConfig:
+    arch: Any                      # ArchConfig
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    schedule: str = "cosine"       # cosine | wsd | const
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 20
+    microbatches: int = 1
+    remat: str = "none"
+    seed: int = 0
+    aux_weight: float = 0.01
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: int
+    params: Any
+    opt_state: Any
+    last_loss: float = float("nan")
+
+
+class TrainDriver:
+    def __init__(self, job: TrainJobConfig,
+                 dist: Optional[lm.Dist] = None):
+        self.job = job
+        cfg = job.arch
+        if job.schedule == "cosine":
+            lr_fn = lambda s: schedules.cosine(s, max(job.steps // 10, 1),
+                                               job.steps, job.lr)
+        elif job.schedule == "wsd":
+            lr_fn = lambda s: schedules.wsd(
+                s, max(job.steps // 10, 1),
+                int(job.steps * 0.7), max(job.steps // 5, 1), job.lr)
+        else:
+            lr_fn = lambda s: jnp.asarray(job.lr)
+        self.optimizer = AdamW(lr_fn=lr_fn)
+        self.dataset = SyntheticLMDataset(
+            vocab_size=cfg.vocab_size, seq_len=job.seq_len,
+            global_batch=job.global_batch, seed=job.seed,
+            with_enc_frames=cfg.is_encoder_decoder, d_model=cfg.d_model,
+            enc_seq_ratio=cfg.enc_seq_ratio,
+        )
+        self.ckpt = Checkpointer(job.ckpt_dir)
+        self.monitor = health.HealthMonitor()
+        self._step_fn = jax.jit(make_train_step(
+            cfg, self.optimizer, dist=dist, remat=job.remat,
+            microbatches=job.microbatches,
+        ))
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> TrainState:
+        params = lm.init_model(self.job.arch, jax.random.PRNGKey(
+            self.job.seed))
+        opt_state = self.optimizer.init(params)
+        return TrainState(step=0, params=params, opt_state=opt_state)
+
+    def run(self, resume: bool = False,
+            state: Optional[TrainState] = None) -> TrainState:
+        if state is None:
+            if resume and self.ckpt.latest_step() is not None:
+                state = self.restore()
+                print(f"resumed from step {state.step}")
+            else:
+                state = self.init_state()
+
+        while state.step < self.job.steps:
+            step = state.step
+            batch = self.dataset.batch(step)
+            t0 = time.time()
+            params, opt_state, metrics = self._step_fn(
+                state.params, state.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            state = TrainState(step + 1, params, opt_state, loss)
+            if self.monitor.record(step, dt):
+                print(f"straggler: step {step} took {dt:.2f}s "
+                      f"(median {self.monitor.median_step_seconds:.2f}s)")
+            if (step + 1) % self.job.ckpt_every == 0 \
+                    or step + 1 == self.job.steps:
+                self.save(state)
+            health.maybe_inject_failure(step + 1)
+        self.ckpt.wait()
+        return state
+
+    # ------------------------------------------------------------------
+    def save(self, state: TrainState, blocking: bool = False) -> None:
+        self.ckpt.save(
+            state.step,
+            {"params": state.params, "opt": state.opt_state},
+            extras={"last_loss": state.last_loss,
+                    "dataset_seed": self.job.seed},
+            blocking=blocking,
+        )
+
+    def restore(self, shardings: Optional[Dict] = None) -> TrainState:
+        templates = {
+            "params": jax.eval_shape(
+                lambda: lm.init_model(self.job.arch,
+                                      jax.random.PRNGKey(self.job.seed))),
+        }
+        templates["opt"] = jax.eval_shape(
+            self.optimizer.init, templates["params"])
+        step, state, extras = self.ckpt.restore(templates, shardings)
+        return TrainState(step=step, params=state["params"],
+                          opt_state=state["opt"],
+                          last_loss=extras.get("last_loss", float("nan")))

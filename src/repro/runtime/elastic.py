@@ -1,0 +1,74 @@
+"""Elastic scaling: recompute the mesh from survivors and reshard state.
+
+When hosts die (or join), the coordinator:
+  1. picks the largest (data x model) grid over the surviving devices
+     subject to the arch's TP-divisibility constraints,
+  2. rebuilds shardings from the same path rules (launch/sharding.py),
+  3. reshards the live (or checkpoint-restored) state with device_put.
+
+Because batches are a pure function of (seed, step) (data/pipeline.py)
+and sharding rules are axis-name based, resuming on the new mesh is
+bit-exact modulo reduction order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch import sharding as shard_rules
+
+
+def largest_grid(n_devices: int, max_model: int,
+                 model_divisors: Sequence[int]) -> tuple:
+    """(data, model) maximizing used devices (ties -> larger model).
+
+    ``model_divisors``: candidate TP sizes, e.g. (16, 8, 4, 2, 1)
+    filtered by the arch's dims.
+    """
+    best = (n_devices, 1)
+    best_used = n_devices
+    for model in sorted(set(model_divisors), reverse=True):
+        if model > max_model or model > n_devices:
+            continue
+        data = n_devices // model
+        used = data * model
+        if used > best_used or (used == best_used and model > best[1]):
+            best, best_used = (data, model), used
+    return best
+
+
+@dataclasses.dataclass
+class ReshardPlan:
+    new_mesh: Mesh
+    param_shardings: Any
+    opt_shardings: Any
+
+
+def plan_remesh(
+    surviving_devices: List,
+    params_shape,
+    opt_shape,
+    model_divisors: Sequence[int] = (16, 8, 4, 2, 1),
+    max_model: int = 16,
+) -> ReshardPlan:
+    data, model = largest_grid(len(surviving_devices), max_model,
+                               model_divisors)
+    n_used = data * model
+    devs = np.asarray(surviving_devices[:n_used]).reshape(data, model)
+    mesh = Mesh(devs, ("data", "model"))
+    return ReshardPlan(
+        new_mesh=mesh,
+        param_shardings=shard_rules.param_shardings(params_shape, mesh),
+        opt_shardings=shard_rules.opt_state_shardings(opt_shape, mesh),
+    )
+
+
+def reshard(state, shardings):
+    """device_put every leaf onto its new sharding (cross-host in prod)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings
+    )

@@ -1,0 +1,71 @@
+"""Health monitoring: heartbeats, straggler detection, failure injection.
+
+On a real multi-host deployment each host runs a ``HealthMonitor``; the
+coordinator aggregates heartbeats and triggers checkpoint-restart (via
+runtime/driver.py) or elastic remesh (runtime/elastic.py) on dead hosts.
+In this container the monitor is exercised by the failure-injection tests
+(single-host), but the logic is host-count agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by the failure-injection hook (REPRO_FAIL_AT_STEP)."""
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    timestamp: float
+
+
+class HealthMonitor:
+    """Per-host step timing + straggler detection.
+
+    A step is flagged a straggler when it exceeds ``threshold`` x the
+    rolling median of the last ``window`` steps.  At cluster scale the
+    same statistic over per-host heartbeats identifies slow hosts; the
+    mitigation hook is pluggable (default: record + warn — a production
+    deployment plugs in hot-spare promotion or in-flight re-dispatch).
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 3.0,
+                 on_straggler: Optional[Callable[[StepRecord], None]] = None):
+        self.window = window
+        self.threshold = threshold
+        self.records: List[StepRecord] = []
+        self.stragglers: List[StepRecord] = []
+        self.on_straggler = on_straggler
+
+    def record(self, step: int, seconds: float) -> bool:
+        rec = StepRecord(step, seconds, time.time())
+        recent = [r.seconds for r in self.records[-self.window:]]
+        self.records.append(rec)
+        if len(recent) >= 8:
+            med = sorted(recent)[len(recent) // 2]
+            if seconds > self.threshold * med:
+                self.stragglers.append(rec)
+                if self.on_straggler:
+                    self.on_straggler(rec)
+                return True
+        return False
+
+    @property
+    def median_step_seconds(self) -> float:
+        if not self.records:
+            return 0.0
+        xs = sorted(r.seconds for r in self.records)
+        return xs[len(xs) // 2]
+
+
+def maybe_inject_failure(step: int) -> None:
+    """Crash the training loop at a chosen step (tests / chaos drills)."""
+    at = os.environ.get("REPRO_FAIL_AT_STEP")
+    if at is not None and step == int(at):
+        raise SimulatedFailure(f"injected failure at step {step}")

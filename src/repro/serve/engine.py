@@ -1,0 +1,82 @@
+"""Serving engine: batched prefill + decode with KV/SSM caches.
+
+``make_serve_step`` builds the one-token decode function the dry-run
+lowers for the decode_32k / long_500k cells; ``Engine`` is the example
+driver that batches requests, prefills, and streams tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+def make_serve_step(cfg, dist: Optional[lm.Dist] = None,
+                    unroll: int = 1) -> Callable:
+    """decode one token for the whole batch.
+
+    serve_step(params, cache, tokens (B,1)) -> (logits (B,V), cache)
+    """
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg, dist=dist,
+                              unroll=unroll)
+
+    return serve_step
+
+
+def make_prefill_fn(cfg, dist: Optional[lm.Dist] = None) -> Callable:
+    def prefill_fn(params, tokens, enc_frames=None):
+        return lm.prefill(params, tokens, cfg, max_len=None,
+                          enc_frames=enc_frames, dist=dist)
+
+    return prefill_fn
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Minimal batched serving loop (greedy decoding).
+
+    Batches requests of equal prompt length (uniform-position cache),
+    prefills once, then steps the decode function; used by
+    examples/serve_batch.py.
+    """
+
+    def __init__(self, cfg, params, max_len: int = 2048,
+                 dist: Optional[lm.Dist] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.dist = dist
+        self._decode = jax.jit(make_serve_step(cfg, dist))
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, t, cfg, max_len=max_len, dist=dist)
+        )
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """prompts: (B, S) equal-length int32. Returns (B, new) tokens."""
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        outs = []
+        key = jax.random.PRNGKey(seed)
+        tok = None
+        for i in range(max_new_tokens):
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            outs.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+        return np.stack(outs, axis=1)

@@ -1,0 +1,78 @@
+"""Dataflow matmul kernels vs the jnp oracle: shape/dtype/dataflow sweep."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dataflow import DataflowSpec, Residency, IS, OS, WS
+from repro.kernels.matmul_df import matmul_df
+from repro.kernels import ops, ref
+
+BLOCK = (128, 128, 128)
+SPECS = {
+    "os_basic": DataflowSpec.basic(OS, block=BLOCK),
+    "os_w_stripe": DataflowSpec(OS, {WS: Residency.STRIPE}, (WS,), BLOCK),
+    "os_w_whole": DataflowSpec(OS, {WS: Residency.WHOLE}, (WS,), BLOCK),
+    "os_i_stripe": DataflowSpec(OS, {IS: Residency.STRIPE}, (IS,), BLOCK),
+    "os_w_whole_i_stripe": DataflowSpec(
+        OS, {WS: Residency.WHOLE, IS: Residency.STRIPE}, (WS, IS), BLOCK),
+    "ws_basic": DataflowSpec.basic(WS, block=BLOCK),
+    "ws_o_stripe": DataflowSpec(WS, {OS: Residency.STRIPE}, (OS,), BLOCK),
+    "ws_i_stripe": DataflowSpec(WS, {IS: Residency.STRIPE}, (IS,), BLOCK),
+    "is_basic": DataflowSpec.basic(IS, block=BLOCK),
+    "is_o_stripe": DataflowSpec(IS, {OS: Residency.STRIPE}, (OS,), BLOCK),
+    "is_b_whole": DataflowSpec(IS, {WS: Residency.WHOLE}, (WS,), BLOCK),
+}
+SHAPES = [(128, 128, 128), (256, 384, 512), (384, 128, 256)]
+
+
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+@pytest.mark.parametrize("shape", SHAPES)
+def test_matmul_dataflows_f32(spec_name, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(hash((spec_name, shape)) % 2**31)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = matmul_df(a, b, SPECS[spec_name], interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("spec_name", ["os_basic", "ws_basic", "is_basic",
+                                       "os_w_stripe", "is_o_stripe"])
+def test_matmul_dataflows_int8(spec_name):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(-127, 127, (256, 256)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 127, (256, 384)), jnp.int8)
+    out = matmul_df(a, b, SPECS[spec_name], interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert out.dtype == jnp.int32
+    assert bool(jnp.all(out == want))
+
+
+@pytest.mark.parametrize("spec_name", ["os_basic", "ws_o_stripe"])
+def test_matmul_dataflows_bf16(spec_name):
+    rng = np.random.default_rng(8)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.bfloat16)
+    out = matmul_df(a, b, SPECS[spec_name], interpret=True)
+    want = ref.matmul_ref(a, b)
+    rel = float(jnp.max(jnp.abs(out - want)) / jnp.max(jnp.abs(want)))
+    assert rel < 1e-5, rel
+
+
+def test_ops_matmul_pads_ragged_shapes():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(300, 200)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(200, 520)), jnp.float32)
+    out = ops.matmul(a, b, backend="interpret")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_untileable_raises():
+    a = jnp.zeros((100, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul_df(a, b, SPECS["os_basic"])

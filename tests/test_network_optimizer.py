@@ -1,0 +1,37 @@
+"""End-to-end network optimizer (paper §IV-B/C pipeline)."""
+from repro.core import network
+from repro.core.dataflow import OS
+
+
+def test_resnet18_plan_all_os_anchored():
+    plan = network.optimize_network(network.resnet18_int8())
+    assert len(plan.layers) == 16
+    assert plan.total_seconds > 0
+    # paper Alg. 8: the explorer lands on OS-anchored everywhere
+    for lp in plan.layers:
+        assert lp.spec.anchor == OS, lp.spec.name
+
+
+def test_mobilenet_and_shufflenet_blocks_plan():
+    net = (network.mobilenet_block_int8(56, 64, 128)
+           + network.shufflenet_stage_int8(28, 128, groups=4, rep=2))
+    plan = network.optimize_network(net)
+    assert len(plan.layers) == len(net)
+    desc = plan.describe()
+    assert "dw" in desc and "g4" in desc
+
+
+def test_depthwise_grouping_changes_costs():
+    dense = network.ConvLayerSpec(28, 28, 3, 3, 1, 128, 128, groups=1)
+    dw = network.ConvLayerSpec(28, 28, 3, 3, 1, 128, 128, groups=128)
+    c_dense = network.plan_layer(dense)[0][1]
+    c_dw = network.plan_layer(dw)[0][1]
+    assert c_dw < c_dense  # depthwise does ~1/128 of the MACs
+
+
+def test_flexible_writes_never_worse():
+    net = network.resnet18_int8()[:6]
+    flex = network.optimize_network(net, flexible_writes=True)
+    rigid = network.optimize_network(net, flexible_writes=False,
+                                     layouts=("NCHWc128", "NHWC"))
+    assert flex.total_seconds <= rigid.total_seconds + 1e-9
