@@ -1,0 +1,118 @@
+"""Fused-epilogue vs unfused GEMM+epilogue: dispatch counts + wall clock.
+
+For each dataflow anchor, compares
+
+  unfused : ``ops.matmul`` followed by the epilogue (dequant scale, bias,
+            silu, residual) as separate XLA ops — the raw accumulator
+            round-trips HBM between the kernel and its epilogue;
+  fused   : ``ops.matmul_fused`` — one kernel dispatch, epilogue applied
+            in-register before the single output write.
+
+Emits CSV rows (``us_per_call`` = interpret-mode wall clock, ``derived``
+= "fused_calls/unfused_calls eqns=fused/unfused") and writes the full
+results to ``BENCH_fused.json`` at the repo root.  Also records that the
+single-dispatch WS lowering issues exactly one ``pallas_call`` per GEMM
+regardless of the reduction depth.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.dataflow import DataflowSpec, IS, OS, WS
+from repro.core.jaxpr_utils import count_eqns, count_pallas_calls
+from repro.kernels import ops
+from repro.kernels.matmul_df import matmul_df
+
+SHAPE = (256, 384, 512)
+BLOCK = (128, 128, 128)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fused.json")
+
+
+def run(out_path: str = OUT_PATH) -> Dict:
+    m, k, n = SHAPE
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(1, n)), jnp.float32)
+    scale = jnp.float32(0.37)
+    residual = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+    results = {
+        "meta": {
+            "backend": "interpret",
+            "shape": list(SHAPE),
+            "epilogue": "scale+bias+silu+residual",
+            "note": "us_per_call is interpret-mode wall clock (CPU proxy); "
+                    "dispatch/eqn counts are backend-independent",
+        },
+        "rows": [],
+    }
+
+    anchors = [("os", DataflowSpec.basic(OS, block=BLOCK)),
+               ("ws", DataflowSpec.basic(WS, block=BLOCK)),
+               ("is", DataflowSpec.basic(IS, block=BLOCK))]
+    for name, spec in anchors:
+        def unfused(x, y):
+            acc = ops.matmul(x, y, spec=spec, backend="interpret")
+            return jax.nn.silu(scale * acc + bias) + residual
+
+        def fused(x, y):
+            return ops.matmul_fused(
+                x, y, bias=bias, scale=scale, residual=residual,
+                activation="silu", spec=spec, backend="interpret",
+            )
+
+        jx_u = jax.make_jaxpr(unfused)(a, b)
+        jx_f = jax.make_jaxpr(fused)(a, b)
+        row = {
+            "name": name,
+            "fused_pallas_calls": count_pallas_calls(jx_f.jaxpr),
+            "unfused_pallas_calls": count_pallas_calls(jx_u.jaxpr),
+            "fused_eqns": count_eqns(jx_f.jaxpr),
+            "unfused_eqns": count_eqns(jx_u.jaxpr),
+            "fused_us": round(time_fn(fused, a, b), 1),
+            "unfused_us": round(time_fn(unfused, a, b), 1),
+        }
+        # the fusion must never add dispatches or interpreter steps
+        assert row["fused_pallas_calls"] <= row["unfused_pallas_calls"], row
+        assert row["fused_eqns"] <= row["unfused_eqns"], row
+        results["rows"].append(row)
+        emit(
+            f"fused/{name}", row["fused_us"],
+            f"calls={row['fused_pallas_calls']}/{row['unfused_pallas_calls']}"
+            f" eqns={row['fused_eqns']}/{row['unfused_eqns']}",
+        )
+        emit(f"fused/{name}_unfused", row["unfused_us"], "")
+
+    # single-dispatch WS: one pallas_call regardless of reduction depth
+    ws = DataflowSpec.basic(WS, block=BLOCK)
+    by_gk = {}
+    for gk in (1, 2, 4):
+        aa = jnp.zeros((256, 128 * gk), jnp.float32)
+        bb = jnp.zeros((128 * gk, 256), jnp.float32)
+        jx = jax.make_jaxpr(
+            lambda x, y: matmul_df(x, y, ws, interpret=True))(aa, bb)
+        by_gk[str(gk)] = count_pallas_calls(jx.jaxpr)
+    assert set(by_gk.values()) == {1}, by_gk
+    results["ws_pallas_calls_by_gk"] = by_gk
+    emit("fused/ws_single_dispatch", 0.0,
+         "calls_by_gk=" + "/".join(f"{g}:{c}" for g, c in by_gk.items()))
+
+    try:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+            f.write("\n")
+    except OSError:
+        pass
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -4,32 +4,52 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for
 column semantics).  The roofline table additionally requires dry-run
 artifacts (python -m repro.launch.dryrun --all); it is skipped with a
 note if they are absent.
+
+``--suites a,b`` runs a comma-separated subset (CI smoke uses
+``--suites fig2_basic_dataflows,fused_epilogue``).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (
         bench_basic_dataflows,
         bench_binary,
         bench_e2e_int8,
         bench_extended_dataflows,
+        bench_fused,
         bench_heuristics,
         bench_roofline,
     )
 
-    print("name,us_per_call,derived")
     suites = [
         ("fig2_basic_dataflows", bench_basic_dataflows.run),
         ("fig7_extended_dataflows", bench_extended_dataflows.run),
         ("table1_heuristics", bench_heuristics.run),
         ("fig8_e2e_int8", bench_e2e_int8.run),
         ("fig9_binary", bench_binary.run),
+        ("fused_epilogue", bench_fused.run),
         ("roofline", bench_roofline.run),
     ]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--suites", default=None,
+        help="comma-separated subset of: "
+             + ",".join(name for name, _ in suites),
+    )
+    args = ap.parse_args(argv)
+    if args.suites:
+        wanted = set(args.suites.split(","))
+        unknown = wanted - {name for name, _ in suites}
+        if unknown:
+            ap.error(f"unknown suites: {sorted(unknown)}")
+        suites = [(n, f) for n, f in suites if n in wanted]
+
+    print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites:
         print(f"# --- {name} ---")

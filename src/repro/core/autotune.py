@@ -1,0 +1,208 @@
+"""Persistent autotuned dataflow-spec cache (PolyDL-style memoization).
+
+``best_spec`` memoizes ``explorer.best_spec`` so the candidate space is
+enumerated and ranked at most once per distinct workload, per process —
+and, via a small on-disk JSON store, at most once per machine.
+
+Key schema (``_key``): a flat string over every field that changes the
+ranking —
+
+    v<CACHE_VERSION>|m|k|n|in_dtype|out_dtype|acc_dtype
+                    |hw=<name>|vmem=<bytes>|backend=<pallas/interpret/xla>
+
+Disk location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  Invalidation: entries embed the key
+schema version, so bumping ``CACHE_VERSION`` (e.g. when the cost model
+or kernel lowering changes materially) orphans every stale entry;
+deleting the file forces a full re-tune.  Disk I/O is best-effort — a
+read-only filesystem degrades to the in-process cache.
+
+An optional *empirical refinement* pass (``refine=True``) re-ranks the
+analytical top-k by interpret-mode wall clock (``explorer.empirical_rank``)
+before caching, trading one-off tuning time for a measured winner — the
+PolyDL observation that autotuned selection over a pruned space beats a
+purely analytical pick.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Iterable, List, Optional
+
+from repro.core import cost_model, explorer
+from repro.core.dataflow import (
+    DataflowSpec,
+    GemmProblem,
+    Residency,
+    Stationarity,
+)
+
+CACHE_VERSION = 1
+
+_memory: Dict[str, DataflowSpec] = {}
+_disk_loaded = False
+_defer_save = False  # warm() batches misses into one disk write
+_stats = {
+    "lookups": 0,       # best_spec calls
+    "hits": 0,          # served from memory or disk
+    "misses": 0,        # required an enumeration
+    "enumerations": 0,  # explorer.explore invocations (incl. refinement)
+}
+
+
+def _key(problem: GemmProblem, hw: cost_model.HardwareSpec,
+         backend: str) -> str:
+    return "|".join([
+        f"v{CACHE_VERSION}",
+        str(problem.m), str(problem.k), str(problem.n),
+        problem.in_dtype, problem.out_dtype, problem.acc_dtype,
+        f"hw={hw.name}", f"vmem={hw.vmem_bytes}", f"backend={backend}",
+    ])
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json"
+    )
+
+
+def _spec_to_json(spec: DataflowSpec) -> dict:
+    return {
+        "anchor": spec.anchor.value,
+        "aux": [[st.value, res.value] for st, res in spec.aux],
+        "aux_priority": [st.value for st in spec.aux_priority],
+        "block": list(spec.block),
+        "vmem_budget": spec.vmem_budget,
+    }
+
+
+def _spec_from_json(d: dict) -> DataflowSpec:
+    return DataflowSpec(
+        anchor=Stationarity(d["anchor"]),
+        aux={Stationarity(s): Residency(r) for s, r in d["aux"]},
+        aux_priority=tuple(Stationarity(s) for s in d["aux_priority"]),
+        block=tuple(d["block"]),
+        vmem_budget=d["vmem_budget"],
+    )
+
+
+def _load_disk() -> None:
+    global _disk_loaded
+    if _disk_loaded:
+        return
+    _disk_loaded = True
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return
+    if data.get("version") != CACHE_VERSION:
+        return
+    for key, entry in data.get("entries", {}).items():
+        if key not in _memory:
+            try:
+                _memory[key] = _spec_from_json(entry)
+            except (KeyError, ValueError, TypeError):
+                continue
+
+
+def _save_disk() -> None:
+    """Atomic, best-effort rewrite of the whole store."""
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        payload = {
+            "version": CACHE_VERSION,
+            "entries": {k: _spec_to_json(s) for k, s in _memory.items()},
+        }
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path), suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        pass
+
+
+def best_spec(
+    problem: GemmProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    backend: str = "pallas",
+    refine: bool = False,
+    refine_top: int = 3,
+) -> DataflowSpec:
+    """Cached ``explorer.best_spec`` for ``problem`` on ``hw``/``backend``."""
+    _load_disk()
+    key = _key(problem, hw, backend)
+    _stats["lookups"] += 1
+    spec = _memory.get(key)
+    if spec is not None:
+        _stats["hits"] += 1
+        return spec
+    _stats["misses"] += 1
+    _stats["enumerations"] += 1
+    ranked = explorer.explore(problem, hw, top=max(1, refine_top))
+    if not ranked:
+        raise ValueError(f"no feasible dataflow for {problem}")
+    spec = ranked[0].spec
+    if refine and len(ranked) > 1:
+        measured = explorer.empirical_rank(
+            problem, [c.spec for c in ranked], interpret=True
+        )
+        spec = measured[0][0]
+    _memory[key] = spec
+    if not _defer_save:
+        _save_disk()
+    return spec
+
+
+def warm(
+    problems: Iterable[GemmProblem],
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    backend: str = "pallas",
+) -> List[DataflowSpec]:
+    """Pre-populate the cache for a known set of hot workloads.
+
+    Misses are batched into a single disk write at the end instead of
+    one full-store rewrite per problem.
+    """
+    global _defer_save
+    before = _stats["misses"]
+    _defer_save = True
+    try:
+        specs = [best_spec(p, hw, backend) for p in problems]
+    finally:
+        _defer_save = False
+    if _stats["misses"] > before:
+        _save_disk()
+    return specs
+
+
+def stats() -> Dict[str, int]:
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+def clear(disk: bool = False) -> None:
+    """Drop the in-process cache; with ``disk=True`` also the JSON store."""
+    global _disk_loaded
+    _memory.clear()
+    _disk_loaded = False
+    if disk:
+        try:
+            os.unlink(cache_path())
+        except OSError:
+            pass

@@ -202,8 +202,18 @@ def gemm_vmem_footprint(p: GemmProblem, spec: DataflowSpec) -> int:
         Residency.STRIPE: bm * p.n if spec.anchor == IS else p.m * bn,
         Residency.WHOLE: p.m * p.n,
     }[res_o] * ob
-    if spec.anchor == OS:
-        foot += bm * bn * ab  # scratch accumulator
+    # scratch accumulator: OS always; basic (streamed-output) WS/IS since
+    # the single-dispatch lowering accumulates in a VMEM scratch too
+    if spec.anchor == OS or res_o == Residency.STREAMED:
+        foot += bm * bn * ab
+    elif p.in_dtype in ("int8", "uint8", "int32", "uint32", "bool"):
+        # integer-input fused epilogues make the output-stripe WS/IS
+        # writers accumulate in an int32 scratch of the stripe's shape
+        # (kernels.matmul_df); charge it conservatively
+        foot += {
+            Residency.STRIPE: bm * p.n if spec.anchor == IS else p.m * bn,
+            Residency.WHOLE: p.m * p.n,
+        }[res_o] * ab
     return foot
 
 

@@ -52,6 +52,51 @@ WS = Stationarity.WEIGHT
 OS = Stationarity.OUTPUT
 
 
+EPILOGUE_ACTIVATIONS = ("relu", "gelu", "silu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Element-wise tail fused into a dataflow kernel's output write.
+
+    The fused computation, applied in-register to the accumulator before
+    the single HBM write each anchor performs, is
+
+        y = act(scale * acc + bias) + residual
+
+    where every stage is optional (identity when its flag is off) and the
+    arithmetic runs in float32 regardless of the accumulator dtype.
+
+    Attributes:
+      bias: add a per-output-column bias vector of shape (1, N).
+      activation: one of ``EPILOGUE_ACTIVATIONS`` or None.
+      scale: multiply by a dequantization scale — shape (1, 1) (per-tensor)
+        or (1, N) (per-column), e.g. ``a_scale * b_scale`` of an int8 GEMM.
+      residual: add a residual tensor of the full output shape (M, N).
+
+    The spec is hashable (a jit static argument); the actual operand
+    arrays travel separately (see ``kernels.matmul_df.matmul_df``).
+    """
+
+    bias: bool = False
+    activation: Optional[str] = None
+    scale: bool = False
+    residual: bool = False
+
+    def __post_init__(self) -> None:
+        if (self.activation is not None
+                and self.activation not in EPILOGUE_ACTIVATIONS):
+            raise ValueError(
+                f"activation {self.activation!r} not in "
+                f"{EPILOGUE_ACTIVATIONS}"
+            )
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.bias or self.activation or self.scale
+                    or self.residual)
+
+
 @dataclasses.dataclass(frozen=True)
 class DataflowSpec:
     """A fully-specified extended dataflow for a GEMM-like tiled kernel.

@@ -40,8 +40,18 @@ class Candidate:
 
 
 def _block_options(dim: int, hw: cost_model.HardwareSpec) -> List[int]:
-    opts = [b for b in (128, 256, 512) if b <= max(dim, 128)]
-    return opts or [128]
+    """Tile-aligned candidate block sizes for one GEMM dimension.
+
+    Blocks are multiples of the hardware lane width, clamped to the
+    lane-padded dimension so a candidate can never exceed the (padded)
+    extent it tiles — e.g. dim=300 pads to 384 and admits {128, 256} but
+    not 512, which would fail ``matmul_df``'s tiling check after the
+    caller pads the operand to a block multiple.
+    """
+    lane = hw.lane
+    padded = -(-max(dim, 1) // lane) * lane
+    opts = [b for b in (lane, 2 * lane, 4 * lane) if b <= padded]
+    return opts or [lane]
 
 
 def enumerate_candidates(
@@ -139,12 +149,22 @@ def empirical_rank(
     Interpret-mode timing is a *correctness-preserving proxy* — it orders
     dataflows by grid-step and data-movement counts, not MXU throughput;
     the analytical model remains the primary ranking signal off-TPU.
+
+    Operands are drawn in ``problem.in_dtype`` so int8/bf16 rankings
+    measure the dtype they claim to.
     """
     import jax.numpy as jnp
 
     rng = np.random.default_rng(seed)
-    a = jnp.asarray(rng.normal(size=(problem.m, problem.k)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(problem.k, problem.n)), jnp.float32)
+    dtype = jnp.dtype(problem.in_dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        a = jnp.asarray(
+            rng.integers(-127, 128, size=(problem.m, problem.k)), dtype)
+        b = jnp.asarray(
+            rng.integers(-127, 128, size=(problem.k, problem.n)), dtype)
+    else:
+        a = jnp.asarray(rng.normal(size=(problem.m, problem.k)), dtype)
+        b = jnp.asarray(rng.normal(size=(problem.k, problem.n)), dtype)
     from repro.kernels import ops
 
     results = []

@@ -1,0 +1,37 @@
+"""Small jaxpr-inspection helpers shared by tests and benchmarks."""
+from __future__ import annotations
+
+
+def _subjaxprs(v):
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        # e.g. lax.cond/switch store their branches as a tuple of jaxprs
+        for item in v:
+            yield from _subjaxprs(item)
+
+
+def _walk(jaxpr, visit) -> int:
+    count = 0
+    for eqn in jaxpr.eqns:
+        count += visit(eqn)
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                count += _walk(sub, visit)
+    return count
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Number of ``pallas_call`` primitives anywhere in ``jaxpr``
+    (recursing into sub-jaxprs) — i.e. kernel dispatches per trace."""
+    return _walk(jaxpr, lambda eqn: eqn.primitive.name == "pallas_call")
+
+
+def count_eqns(jaxpr) -> int:
+    """Total equation count including sub-jaxprs — a dispatch/step-count
+    proxy for comparing fused vs unfused lowerings."""
+    return _walk(jaxpr, lambda eqn: 1)

@@ -4,11 +4,11 @@ Each ``DataflowSpec`` lowers to a distinct ``pl.pallas_call``:
 
   anchor=OS : grid (gm, gn, gk), k innermost; fp32/int32 VMEM scratch
               accumulator, output flushed to HBM once per tile.
-  anchor=WS : grid (gk, gn, gm), weight tile constant while m sweeps;
-              outputs read-modify-written via input_output_aliasing
-              (reproducing the paper's WS output traffic).
-  anchor=IS : grid (gm, gk, gn), input tile constant while n sweeps;
-              outputs RMW like WS.
+  anchor=WS : grid (gn, gm, gk), n outermost so each weight column-panel
+              is swept before moving on; output tile revisited across the
+              in-grid reduction (consecutive revisits -> one HBM write).
+  anchor=IS : grid (gm, gn, gk), m outermost so each input row-stripe is
+              swept before moving on; outputs revisited like WS.
 
 Auxiliary stationarities change BlockSpecs (and sometimes the grid order):
   input  STRIPE -> A block (bm, K), index (i, 0)   [resident per m-stripe]
@@ -17,19 +17,60 @@ Auxiliary stationarities change BlockSpecs (and sometimes the grid order):
   output STRIPE -> O block (., .) held across the reduction sweep
                    (WS: (M, bn) per n; IS: (bm, N) per m), written once.
 
-Validated against ``ref.matmul_ref`` in interpret mode (tests/test_matmul_df).
+Single-dispatch WS/IS lowering: the basic (streamed-output) WS/IS
+dataflows — whose defining property in the paper is that outputs are
+read-modify-written once per reduction step — are lowered as ONE
+``pallas_call`` with the reduction innermost in the grid: partial sums
+accumulate exactly in a VMEM scratch of the accumulator dtype and only
+the final, post-epilogue value reaches HBM.  This removes the
+per-reduction-panel dispatch and the zeros-initialization round trip of
+the previous lowering (one aliased call per k panel); the paper's
+per-step partial-sum round trips move from HBM into VMEM.  The anchored
+operand keeps its stationarity as a resident stripe — WS holds the
+(K, bn) weight column-stripe per j, IS the (bm, K) input row-stripe per
+i — so HBM traffic matches what ``cost_model.gemm_traffic`` charges the
+anchor's reads; the model intentionally keeps the paper's RMW *output*
+accounting for basic WS/IS so the explorer's ranking stays comparable
+with the paper's tables.
+
+Precision note: the OS and basic-WS/IS paths always accumulate in a
+VMEM scratch of the accumulator dtype (exact for int8->int32), and the
+output-stripe WS/IS writers do the same whenever an integer-input fused
+epilogue is active — so every int8 path is bit-exact regardless of
+reduction depth.  Float output-stripe variants accumulate in the output
+dtype inside the revisited output block (the seed behaviour; exact at
+the default float32 out_dtype).
+
+Fused epilogues: every anchor can apply an ``Epilogue`` (dequant scale,
+bias, activation, residual — ``core.dataflow.Epilogue``) in-register at
+the point the accumulator is flushed: the OS scratch flush, the WS/IS
+stripe writers' final reduction visit, and the single-dispatch RMW
+path's last k step.  The raw accumulator never touches HBM; the one
+output write carries the post-epilogue values.
+
+Validated against ``ref.matmul_ref`` / ``ref.matmul_fused_ref`` in
+interpret mode (tests/test_kernels_matmul, tests/test_fused_epilogue).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.dataflow import DataflowSpec, Residency, Stationarity, IS, OS, WS
+from repro.core.dataflow import (
+    DataflowSpec,
+    Epilogue,
+    Residency,
+    Stationarity,
+    IS,
+    OS,
+    WS,
+)
+from repro.kernels.ref import ACTIVATION_FNS as _ACT_FNS
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
@@ -37,10 +78,95 @@ def _acc_dtype(in_dtype) -> jnp.dtype:
 
 
 # ---------------------------------------------------------------------------
+# Epilogue plumbing shared by all anchors.
+#
+# Operand order is canonical — (scale, bias, residual), each present iff
+# its Epilogue flag is set — appended to the pallas_call inputs after A/B.
+# ---------------------------------------------------------------------------
+def _apply_epilogue(epi: Optional[Epilogue], acc, scale, bias, residual,
+                    out_dtype):
+    """y = act(scale * acc + bias) + residual, computed in float32."""
+    if epi is None:
+        return acc.astype(out_dtype)
+    x = acc.astype(jnp.float32)
+    if epi.scale:
+        x = x * scale
+    if epi.bias:
+        x = x + bias
+    if epi.activation is not None:
+        x = _ACT_FNS[epi.activation](x)
+    if epi.residual:
+        x = x + residual.astype(jnp.float32)
+    return x.astype(out_dtype)
+
+
+def _read_epi(epi: Optional[Epilogue], refs: Sequence,
+              res_rows=None, res_cols=None):
+    """Read (scale, bias, residual) values from the kernel's epilogue refs.
+
+    ``res_rows``/``res_cols`` slice the residual block for the stripe
+    writers whose output block spans a full stripe.
+    """
+    if epi is None:
+        return None, None, None
+    it = iter(refs)
+    scale = next(it)[...] if epi.scale else None
+    bias = next(it)[...] if epi.bias else None
+    residual = None
+    if epi.residual:
+        r = next(it)
+        if res_rows is not None:
+            residual = r[res_rows, :]
+        elif res_cols is not None:
+            residual = r[:, res_cols]
+        else:
+            residual = r[...]
+    return scale, bias, residual
+
+
+def _epi_operands(epi: Optional[Epilogue], scale, bias, residual):
+    if epi is None:
+        return ()
+    ops = []
+    if epi.scale:
+        ops.append(scale)
+    if epi.bias:
+        ops.append(bias)
+    if epi.residual:
+        ops.append(residual)
+    return tuple(ops)
+
+
+def _epi_specs(epi: Optional[Epilogue], scale, bn: int,
+               scale_j, bias_j, res_block, res_map):
+    """BlockSpecs for the epilogue operands.
+
+    ``scale_j``/``bias_j``: index maps returning the output column-block
+    index j from the grid ids; ``res_block``/``res_map`` describe the
+    residual block (matching the builder's output blocking).
+    """
+    if epi is None:
+        return []
+    specs = []
+    if epi.scale:
+        if scale.shape[1] == 1:  # per-tensor
+            specs.append(pl.BlockSpec((1, 1), lambda *g: (0, 0)))
+        else:                    # per-column
+            specs.append(pl.BlockSpec((1, bn), scale_j))
+    if epi.bias:
+        specs.append(pl.BlockSpec((1, bn), bias_j))
+    if epi.residual:
+        specs.append(pl.BlockSpec(res_block, res_map))
+    return specs
+
+
+# ---------------------------------------------------------------------------
 # OS-anchored kernels.
 # ---------------------------------------------------------------------------
-def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, bk: int,
-               a_stripe: bool, b_res: Residency, n_first: bool):
+def _os_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
+               b_res: Residency, n_first: bool, epi: Optional[Epilogue]):
+    o_ref, acc_ref = refs[-2], refs[-1]
+    epi_refs = refs[:-2]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -61,10 +187,14 @@ def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, bk: int,
 
     @pl.when(k == gk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        scale, bias, residual = _read_epi(epi, epi_refs)
+        o_ref[...] = _apply_epilogue(
+            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+        )
 
 
-def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
+              epi, epi_args):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
@@ -96,6 +226,10 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
         i, j = ij(g0, g1)
         return (i, j)
 
+    def j_map(g0, g1, k):
+        _, j = ij(g0, g1)
+        return (0, j)
+
     a_block = (bm, kdim) if a_stripe else (bm, bk)
     b_block = {
         Residency.WHOLE: (kdim, n),
@@ -105,158 +239,253 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
 
     kernel = functools.partial(
         _os_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=res_b,
-        n_first=n_first,
+        n_first=n_first, epi=epi,
     )
+    scale = epi_args[0] if (epi is not None and epi.scale) else None
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(a_block, a_map),
             pl.BlockSpec(b_block, b_map),
+            *_epi_specs(epi, scale, bn, j_map, j_map, (bm, bn), o_map),
         ],
         out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
         interpret=interpret,
-    )(a, b)
+    )(a, b, *epi_args)
 
 
 # ---------------------------------------------------------------------------
-# WS/IS-anchored kernels.
-#
-# Pallas TPU requires revisited output blocks to be *consecutive* in the
-# grid, so the basic (streamed-output) WS/IS dataflows — whose defining
-# property is that outputs are read-modify-written once per reduction step —
-# are lowered as one aliased pallas_call per reduction panel.  This is the
-# paper's WS/IS memory behaviour verbatim: partial sums round-trip HBM.
+# WS/IS-anchored kernels, streamed outputs (single dispatch).
 # ---------------------------------------------------------------------------
-def _rmw_panel_kernel(a_ref, b_ref, o_in_ref, o_ref, *, b_whole: bool,
-                      k_panel: int, bk: int, bn: int, a_whole: bool,
-                      m_minor: bool):
-    """out(i,j) += A(i, k_panel) @ B(k_panel, j) for one reduction panel."""
-    i = pl.program_id(1) if m_minor else pl.program_id(0)
-    j = pl.program_id(0) if m_minor else pl.program_id(1)
+def _rmw_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
+                b_res: Residency, m_minor: bool,
+                epi: Optional[Epilogue]):
+    """Accumulate A(i,:) @ B(:,j) across the in-grid reduction.
+
+    Grid is (outer, inner, gk) with the reduction innermost; the output
+    block index (i, j) is constant across the k sweep, so its revisits
+    are consecutive and only the final visit — accumulated exactly in
+    the VMEM scratch, post-epilogue — reaches HBM.
+    """
+    o_ref, acc_ref = refs[-2], refs[-1]
+    epi_refs = refs[:-2]
+    k = pl.program_id(2)
+    if m_minor:   # WS: j outermost, i sweeps before the next weight stripe
+        j = pl.program_id(0)
+    else:         # IS: i outermost, j sweeps before the next input stripe
+        j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
     a = a_ref[...]
-    if a_whole:  # A panel (M, bk) resident: slice the m rows
-        bm = o_ref.shape[0]
-        a = a_ref[pl.dslice(i * bm, bm), :]
+    if a_stripe:  # A block is (bm, K): slice the active k panel
+        a = a_ref[:, pl.dslice(k * bk, bk)]
     b = b_ref[...]
-    if b_whole:  # B (K, N) resident: slice the active panel/tile
-        b = b_ref[pl.dslice(k_panel * bk, bk), pl.dslice(j * bn, bn)]
-    part = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
-    o_ref[...] = o_in_ref[...] + part
+    if b_res == Residency.STRIPE:   # B block is (K, bn)
+        b = b_ref[pl.dslice(k * bk, bk), :]
+    elif b_res == Residency.WHOLE:  # B (K, N) resident
+        bn = acc_ref.shape[1]
+        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        scale, bias, residual = _read_epi(epi, epi_refs)
+        o_ref[...] = _apply_epilogue(
+            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+        )
 
 
 def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
-               m_minor: bool):
-    """Basic WS (m_minor=True) / IS (m_minor=False) with streamed outputs."""
+               m_minor: bool, epi, epi_args):
+    """Basic WS (m_minor=True) / IS (m_minor=False) with streamed outputs.
+
+    One ``pallas_call`` regardless of the reduction depth: the k loop is
+    the innermost grid dimension and the output block is revisited in
+    place (no per-panel dispatch, no zeros-init round trip, no aliasing).
+    The anchored operand stays stripe-resident — the WS weight
+    column-stripe (K, bn) is fetched once per j, the IS input row-stripe
+    (bm, K) once per i — matching the traffic ``cost_model.gemm_traffic``
+    charges the anchor.
+    """
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
     res_a = spec.residency(IS)
     res_b = spec.residency(WS)
-    a_whole = m_minor and res_a in (Residency.STRIPE, Residency.WHOLE)
-    b_whole = (not m_minor) and res_b == Residency.WHOLE
+    # the anchored operand is stripe-resident by construction
+    a_stripe = (not m_minor) or res_a in (Residency.STRIPE, Residency.WHOLE)
+    b_res = Residency.STRIPE if m_minor else res_b
+    if b_res == Residency.STRIPE and not m_minor:
+        b_res = Residency.STREAMED  # IS aux stripe on B cannot survive m
 
-    a_block = (m, bk) if a_whole else (bm, bk)
-    b_block = (kdim, n) if b_whole else (bk, bn)
-    grid = (gn, gm) if m_minor else (gm, gn)
+    a_block = (bm, kdim) if a_stripe else (bm, bk)
+    b_block = {
+        Residency.WHOLE: (kdim, n),
+        Residency.STRIPE: (kdim, bn),
+        Residency.STREAMED: (bk, bn),
+    }[b_res]
+    grid = (gn, gm, gk) if m_minor else (gm, gn, gk)
 
-    out = jnp.zeros((m, n), out_dtype)
-    for k in range(gk):
-        if m_minor:  # WS: weight tile constant while m sweeps (inner)
-            a_map = (lambda j, i, kk=k: (0, kk)) if a_whole else (
-                lambda j, i, kk=k: (i, kk))
-            b_map = (lambda j, i, kk=k: (kk, j))
-            o_map = lambda j, i: (i, j)
-        else:        # IS: input tile constant while n sweeps (inner)
-            a_map = lambda i, j, kk=k: (i, kk)
-            b_map = (lambda i, j: (0, 0)) if b_whole else (
-                lambda i, j, kk=k: (kk, j))
-            o_map = lambda i, j: (i, j)
-        kernel = functools.partial(
-            _rmw_panel_kernel, b_whole=b_whole, k_panel=k, bk=bk, bn=bn,
-            a_whole=a_whole, m_minor=m_minor,
-        )
-        out = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec(a_block, a_map),
-                pl.BlockSpec(b_block, b_map),
-                pl.BlockSpec((bm, bn), o_map),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), o_map),
-            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-            input_output_aliases={2: 0},
-            interpret=interpret,
-        )(a, b, out)
-    return out
+    if m_minor:   # grid ids (j, i, k)
+        idx = lambda j, i, k: (i, j, k)
+    else:         # grid ids (i, j, k)
+        idx = lambda i, j, k: (i, j, k)
+
+    def a_map(g0, g1, g2):
+        i, _, k = idx(g0, g1, g2)
+        return (i, 0) if a_stripe else (i, k)
+
+    def b_map(g0, g1, g2):
+        _, j, k = idx(g0, g1, g2)
+        if b_res == Residency.WHOLE:
+            return (0, 0)
+        if b_res == Residency.STRIPE:
+            return (0, j)
+        return (k, j)
+
+    def o_map(g0, g1, g2):
+        i, j, _ = idx(g0, g1, g2)
+        return (i, j)
+
+    def j_map(g0, g1, g2):
+        _, j, _ = idx(g0, g1, g2)
+        return (0, j)
+
+    kernel = functools.partial(
+        _rmw_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=b_res,
+        m_minor=m_minor, epi=epi,
+    )
+    scale = epi_args[0] if (epi is not None and epi.scale) else None
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a_block, a_map),
+            pl.BlockSpec(b_block, b_map),
+            *_epi_specs(epi, scale, bn, j_map, j_map, (bm, bn), o_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
+        interpret=interpret,
+    )(a, b, *epi_args)
 
 
-def _ws_stripe_kernel(a_ref, b_ref, o_ref, *, bm: int):
+# ---------------------------------------------------------------------------
+# WS-anchored, output-stripe kernels.
+# ---------------------------------------------------------------------------
+def _ws_stripe_kernel(a_ref, b_ref, *refs, bm: int, gk: int,
+                      epi: Optional[Epilogue], use_acc: bool):
+    if use_acc:   # exact accumulation in a scratch of the acc dtype
+        o_ref, acc_ref = refs[-2], refs[-1]
+        epi_refs = refs[:-2]
+    else:
+        o_ref, acc_ref = refs[-1], None
+        epi_refs = refs[:-1]
+    buf = acc_ref if use_acc else o_ref
     k, i = pl.program_id(1), pl.program_id(2)
     part = jnp.dot(a_ref[...], b_ref[...],
-                   preferred_element_type=o_ref.dtype)
+                   preferred_element_type=buf.dtype)
     sl = pl.dslice(i * bm, bm)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[sl, :] = part
+        buf[sl, :] = part
 
     @pl.when(k != 0)
     def _acc():
-        o_ref[sl, :] += part
+        buf[sl, :] += part
+
+    if epi is not None:
+        @pl.when(k == gk - 1)
+        def _epilogue():
+            scale, bias, residual = _read_epi(epi, epi_refs, res_rows=sl)
+            o_ref[sl, :] = _apply_epilogue(
+                epi, buf[sl, :], scale, bias, residual, o_ref.dtype
+            )
 
 
-def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
+              epi, epi_args):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
     res_a, res_o = spec.residency(IS), spec.residency(OS)
-    a_stripe = res_a in (Residency.STRIPE, Residency.WHOLE)
 
     if res_o in (Residency.STRIPE, Residency.WHOLE):
         # grid (gn, gk, gm): weight blocks each fetched once; output stripe
-        # (M, bn) resident per n, written once — no RMW.
-        kernel = functools.partial(_ws_stripe_kernel, bm=bm)
+        # (M, bn) resident per n, written once — no RMW.  Integer-input
+        # fused epilogues accumulate exactly in an int32 scratch stripe.
+        use_acc = epi is not None and jnp.issubdtype(a.dtype, jnp.integer)
+        kernel = functools.partial(_ws_stripe_kernel, bm=bm, gk=gk, epi=epi,
+                                   use_acc=use_acc)
+        j_map = lambda j, k, i: (0, j)
+        scale = epi_args[0] if (epi is not None and epi.scale) else None
         return pl.pallas_call(
             kernel,
             grid=(gn, gk, gm),
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda j, k, i: (i, k)),
                 pl.BlockSpec((bk, bn), lambda j, k, i: (k, j)),
+                *_epi_specs(epi, scale, bn, j_map, j_map, (m, bn), j_map),
             ],
             out_specs=pl.BlockSpec((m, bn), lambda j, k, i: (0, j)),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=(
+                [pltpu.VMEM((m, bn), _acc_dtype(a.dtype))] if use_acc
+                else []),
             interpret=interpret,
-        )(a, b)
+        )(a, b, *epi_args)
 
-    # streamed outputs: RMW per reduction panel (the paper's WS traffic)
-    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=True)
+    # streamed outputs: single-dispatch revisited accumulation
+    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=True,
+                      epi=epi, epi_args=epi_args)
 
 
 # ---------------------------------------------------------------------------
 # IS-anchored kernels.
 # ---------------------------------------------------------------------------
-def _is_stripe_kernel(a_ref, b_ref, o_ref, *, b_whole: bool, bk: int, bn: int):
+def _is_stripe_kernel(a_ref, b_ref, *refs, b_whole: bool, bk: int, bn: int,
+                      gk: int, epi: Optional[Epilogue], use_acc: bool):
+    if use_acc:   # exact accumulation in a scratch of the acc dtype
+        o_ref, acc_ref = refs[-2], refs[-1]
+        epi_refs = refs[:-2]
+    else:
+        o_ref, acc_ref = refs[-1], None
+        epi_refs = refs[:-1]
+    buf = acc_ref if use_acc else o_ref
     k, j = pl.program_id(1), pl.program_id(2)
     b = b_ref[...]
     if b_whole:
         b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
-    part = jnp.dot(a_ref[...], b, preferred_element_type=o_ref.dtype)
+    part = jnp.dot(a_ref[...], b, preferred_element_type=buf.dtype)
     sl = pl.dslice(j * bn, bn)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[:, sl] = part
+        buf[:, sl] = part
 
     @pl.when(k != 0)
     def _acc():
-        o_ref[:, sl] += part
+        buf[:, sl] += part
+
+    if epi is not None:
+        @pl.when(k == gk - 1)
+        def _epilogue():
+            scale, bias, residual = _read_epi(epi, epi_refs, res_cols=sl)
+            o_ref[:, sl] = _apply_epilogue(
+                epi, buf[:, sl], scale, bias, residual, o_ref.dtype
+            )
 
 
-def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
+def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
+              epi, epi_args):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
@@ -266,23 +495,33 @@ def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool):
     b_map = (lambda i, k, j: (0, 0)) if b_whole else (lambda i, k, j: (k, j))
 
     if res_o in (Residency.STRIPE, Residency.WHOLE):
+        use_acc = epi is not None and jnp.issubdtype(a.dtype, jnp.integer)
         kernel = functools.partial(
-            _is_stripe_kernel, b_whole=b_whole, bk=bk, bn=bn
+            _is_stripe_kernel, b_whole=b_whole, bk=bk, bn=bn, gk=gk, epi=epi,
+            use_acc=use_acc,
         )
+        j_map = lambda i, k, j: (0, j)
+        i_map = lambda i, k, j: (i, 0)
+        scale = epi_args[0] if (epi is not None and epi.scale) else None
         return pl.pallas_call(
             kernel,
             grid=(gm, gk, gn),
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda i, k, j: (i, k)),
                 pl.BlockSpec(b_block, b_map),
+                *_epi_specs(epi, scale, bn, j_map, j_map, (bm, n), i_map),
             ],
             out_specs=pl.BlockSpec((bm, n), lambda i, k, j: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=(
+                [pltpu.VMEM((bm, n), _acc_dtype(a.dtype))] if use_acc
+                else []),
             interpret=interpret,
-        )(a, b)
+        )(a, b, *epi_args)
 
-    # streamed outputs: RMW per reduction panel (the paper's IS traffic)
-    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=False)
+    # streamed outputs: single-dispatch revisited accumulation
+    return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=False,
+                      epi=epi, epi_args=epi_args)
 
 
 # ---------------------------------------------------------------------------
@@ -294,9 +533,19 @@ def matmul_df(
     spec: DataflowSpec,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    epilogue: Optional[Epilogue] = None,
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
     """(M, K) @ (K, N) under the given dataflow. Shapes must tile evenly
-    by ``spec.block`` (use ``ops.matmul`` for automatic padding)."""
+    by ``spec.block`` (use ``ops.matmul`` / ``ops.matmul_fused`` for
+    automatic padding).
+
+    With ``epilogue`` set, ``y = act(scale * acc + bias) + residual`` is
+    applied in-register before the output write: ``scale`` is (1, 1) or
+    (1, N) float32, ``bias`` is (1, N) float32, ``residual`` is (M, N).
+    """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
     m, kdim = a.shape
@@ -306,7 +555,27 @@ def matmul_df(
         raise ValueError(
             f"shapes ({m},{kdim},{n}) must tile by block {spec.block}"
         )
+    epi = epilogue if (epilogue is not None and not epilogue.is_noop) else None
+    if epi is not None:
+        if epi.scale:
+            if scale is None:
+                raise ValueError("epilogue.scale set but no scale array")
+            if scale.shape not in ((1, 1), (1, n)):
+                raise ValueError(f"scale shape {scale.shape} != (1,1)/(1,{n})")
+        if epi.bias:
+            if bias is None:
+                raise ValueError("epilogue.bias set but no bias array")
+            if bias.shape != (1, n):
+                raise ValueError(f"bias shape {bias.shape} != (1, {n})")
+        if epi.residual:
+            if residual is None:
+                raise ValueError("epilogue.residual set but no residual array")
+            if residual.shape != (m, n):
+                raise ValueError(
+                    f"residual shape {residual.shape} != ({m}, {n})"
+                )
     if out_dtype is None:
-        out_dtype = _acc_dtype(a.dtype)
+        out_dtype = jnp.float32 if epi is not None else _acc_dtype(a.dtype)
+    epi_args = _epi_operands(epi, scale, bias, residual)
     build = {OS: _build_os, WS: _build_ws, IS: _build_is}[spec.anchor]
-    return build(a, b, out_dtype, spec, interpret)
+    return build(a, b, out_dtype, spec, interpret, epi, epi_args)

@@ -1,9 +1,15 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 These handle padding to tile boundaries, dataflow selection (via the
-explorer's default policy when no spec is given), backend dispatch
+``core.autotune`` spec cache when no spec is given), backend dispatch
 (Pallas on TPU, interpret-mode Pallas or the jnp oracle elsewhere), and
 quantization plumbing.
+
+``matmul_fused`` / ``int8_matmul_fused`` execute the whole layer —
+GEMM plus its epilogue (dequant scale, bias, activation, residual) — in
+one kernel dispatch: the epilogue is applied in-register before the
+single HBM output write instead of as separate XLA ops re-reading the
+raw accumulator from HBM.
 """
 from __future__ import annotations
 
@@ -13,7 +19,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.dataflow import DataflowSpec, GemmProblem, Residency, IS, OS, WS
+from repro.core import autotune
+from repro.core.dataflow import (
+    DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
+)
 from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
 
@@ -29,6 +38,18 @@ def _pad_to(x: jax.Array, mults, value=0):
         pads.append((0, pad))
         needs |= pad > 0
     return jnp.pad(x, pads, constant_values=value) if needs else x
+
+
+def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype) -> GemmProblem:
+    integer = jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer)
+    if out_dtype is None:
+        out = "int32" if integer else "float32"
+    else:
+        out = str(jnp.dtype(out_dtype))
+    return GemmProblem(
+        m=m, k=k, n=n, in_dtype=str(jnp.dtype(in_dtype)), out_dtype=out,
+        acc_dtype="int32" if integer else "float32",
+    )
 
 
 def default_matmul_spec(m: int, k: int, n: int, in_dtype="bfloat16",
@@ -61,14 +82,22 @@ def matmul(
     out_dtype=None,
     backend: Optional[str] = None,   # "pallas" | "interpret" | "xla"
 ) -> jax.Array:
-    """(M, K) @ (K, N) with automatic padding under a dataflow spec."""
+    """(M, K) @ (K, N) with automatic padding under a dataflow spec.
+
+    With ``spec=None`` the dataflow comes from the ``core.autotune``
+    cache — the explorer's candidate space is enumerated once per
+    distinct (shape, dtype, hardware, backend) and memoized in-process
+    and on disk.
+    """
     m, k = a.shape
     n = b.shape[1]
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
         return ref.matmul_ref(a, b, out_dtype)
     if spec is None:
-        spec = default_matmul_spec(m, k, n, str(a.dtype))
+        spec = autotune.best_spec(
+            _gemm_problem(m, k, n, a.dtype, out_dtype), backend=backend
+        )
     bm, bk, bn = spec.block
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
@@ -197,3 +226,111 @@ def int8_matmul(
     """Quantized GEMM: int8 x int8 -> int32 (MXU) -> dequantized f32."""
     acc = matmul(aq, bq, spec=spec, out_dtype=jnp.int32, backend=backend)
     return acc.astype(jnp.float32) * a_scale * b_scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "spec", "out_dtype", "backend")
+)
+def matmul_fused(
+    a: jax.Array,
+    b: jax.Array,
+    bias: Optional[jax.Array] = None,       # (N,) or (1, N) float
+    scale: Optional[jax.Array] = None,      # scalar or (N,) dequant scale
+    residual: Optional[jax.Array] = None,   # (M, N)
+    activation: Optional[str] = None,       # relu | gelu | silu
+    spec: Optional[DataflowSpec] = None,
+    out_dtype=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Fused-epilogue GEMM: ``act(scale * (a @ b) + bias) + residual``.
+
+    One kernel dispatch per layer: the epilogue runs in-register on the
+    accumulator, so the raw GEMM result never round-trips HBM.  Shapes
+    pad automatically like ``matmul``; epilogue math is float32 and the
+    default output dtype is float32.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, n)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+        if scale.size == 1:
+            scale = scale.reshape(1, 1)
+        elif scale.size == n:
+            scale = scale.reshape(1, n)
+        else:
+            raise ValueError(
+                f"scale must be scalar or per-column (N={n}), got "
+                f"{scale.shape}"
+            )
+    if backend == "xla":
+        return ref.matmul_fused_ref(
+            a, b, bias=bias, scale=scale, residual=residual,
+            activation=activation, out_dtype=out_dtype,
+        )
+    epi = Epilogue(
+        bias=bias is not None,
+        activation=activation,
+        scale=scale is not None,
+        residual=residual is not None,
+    )
+    if spec is None:
+        spec = autotune.best_spec(
+            _gemm_problem(m, k, n, a.dtype, out_dtype or jnp.float32),
+            backend=backend,
+        )
+    bm, bk, bn = spec.block
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    mp, np_ = ap.shape[0], bp.shape[1]
+    if bias is not None:
+        bias = _pad_to(bias, (1, bn))
+    if scale is not None and scale.shape[1] != 1:
+        scale = _pad_to(scale, (1, bn))
+    if residual is not None:
+        residual = _pad_to(residual, (bm, bn))
+    spec = spec.with_block((min(bm, mp), min(bk, ap.shape[1]),
+                            min(bn, np_)))
+    out = matmul_df.matmul_df(
+        ap, bp, spec, out_dtype=out_dtype or jnp.float32,
+        interpret=backend == "interpret",
+        epilogue=epi, scale=scale, bias=bias, residual=residual,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "spec", "backend"))
+def int8_matmul_fused(
+    aq: jax.Array, bq: jax.Array, a_scale: jax.Array, b_scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    spec: Optional[DataflowSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Quantized GEMM with the dequant + epilogue fused into the kernel:
+    ``act((a_scale * b_scale) * (aq @ bq) + bias) + residual`` -> f32.
+
+    Scales must be per-tensor (scalar) or combine to per-output-column;
+    per-row activation scales need the unfused ``int8_matmul``.
+    """
+    scale = (jnp.asarray(a_scale, jnp.float32)
+             * jnp.asarray(b_scale, jnp.float32))
+    n = bq.shape[1]
+    # shape-based check: a per-row (M, 1) scale must not be mistaken for a
+    # per-column vector even when M == N
+    per_tensor = scale.size == 1
+    per_column = (scale.shape == (n,)
+                  or (scale.ndim == 2 and scale.shape[0] == 1
+                      and scale.shape[1] == n))
+    if not (per_tensor or per_column):
+        raise ValueError(
+            f"fused dequant needs scalar or per-column scales, got "
+            f"combined shape {scale.shape}; use int8_matmul instead"
+        )
+    return matmul_fused(
+        aq, bq, bias=bias, scale=scale.reshape(1, -1), residual=residual,
+        activation=activation, spec=spec, backend=backend,
+    )

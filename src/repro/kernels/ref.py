@@ -10,6 +10,17 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.dataflow import EPILOGUE_ACTIVATIONS
+
+# the single name->fn table for epilogue activations; the in-kernel
+# fusion (kernels.matmul_df) uses this same mapping
+ACTIVATION_FNS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+assert set(ACTIVATION_FNS) == set(EPILOGUE_ACTIVATIONS)
+
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
@@ -151,3 +162,30 @@ def int8_matmul_ref(aq, bq, a_scale, b_scale) -> jax.Array:
     """Dequantized int8 GEMM oracle -> float32."""
     acc = jnp.dot(aq, bq, preferred_element_type=jnp.int32)
     return acc.astype(jnp.float32) * a_scale * b_scale
+
+
+def matmul_fused_ref(
+    a: jax.Array,
+    b: jax.Array,
+    bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused-epilogue GEMM oracle: act(scale * (a @ b) + bias) + residual.
+
+    Epilogue arithmetic runs in float32 (matching the in-kernel fusion);
+    ``bias``/``scale``/``residual`` may be any broadcastable shape.
+    """
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    x = jnp.dot(a, b, preferred_element_type=acc).astype(jnp.float32)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    if activation is not None:
+        x = ACTIVATION_FNS[activation](x)
+    if residual is not None:
+        x = x + residual.astype(jnp.float32)
+    return x.astype(out_dtype or jnp.float32)

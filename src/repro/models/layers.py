@@ -389,7 +389,39 @@ def init_mlp(key, d_model: int, d_ff: int, dtype="bfloat16") -> Params:
     }
 
 
-def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+def fused_dense(
+    x: jax.Array,                    # (..., d_in)
+    w: jax.Array,                    # (d_in, d_out)
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Projection through the fused-epilogue Pallas GEMM.
+
+    Collapses leading dims, runs ``ops.matmul_fused`` (one kernel
+    dispatch: GEMM + bias/activation/residual applied in-register before
+    the output write, autotuned dataflow spec), and restores the shape.
+    """
+    from repro.kernels import ops as kops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    r2 = (residual.reshape(-1, residual.shape[-1])
+          if residual is not None else None)
+    out = kops.matmul_fused(x2, w, bias=bias, residual=r2,
+                            activation=activation)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg=None) -> jax.Array:
+    """SwiGLU MLP.  With ``cfg.use_pallas_kernels`` on a TPU runtime the
+    three projections run through the fused-epilogue kernel path (the
+    gate's silu is fused into its GEMM's output write)."""
+    if (cfg is not None and getattr(cfg, "use_pallas_kernels", False)
+            and jax.default_backend() == "tpu"):
+        gate = fused_dense(x, p["w1"], activation="silu")
+        up = fused_dense(x, p["w3"])
+        return fused_dense((gate * up).astype(x.dtype), p["w2"])
     gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w1"]))
     up = jnp.einsum("...d,df->...f", x, p["w3"])
     return jnp.einsum("...f,fd->...d", gate * up, p["w2"])

@@ -96,6 +96,28 @@ def init_model(cfg, key) -> Params:
     return params
 
 
+def hot_gemm_problems(cfg, batch: int, seq: int):
+    """The GEMM workloads that actually route through the autotuned
+    fused-kernel path, as ``GemmProblem`` rows.
+
+    Used to pre-populate the ``core.autotune`` spec cache (e.g. by
+    ``serve.engine.Engine``) so the fused path never enumerates the
+    dataflow candidate space at trace time.  Today that is the MLP's
+    three projections (``layers.mlp_apply`` -> ``fused_dense``); extend
+    this list as more matmuls (attention projections, LM head) are
+    moved onto ``ops.matmul_fused``.
+    """
+    from repro.core.dataflow import GemmProblem
+
+    t = batch * seq
+    dt = str(jnp.dtype(cfg.param_dtype))
+    shapes = set()
+    if cfg.d_ff and cfg.family != "ssm":
+        shapes.add((t, cfg.d_model, cfg.d_ff))
+        shapes.add((t, cfg.d_ff, cfg.d_model))
+    return [GemmProblem(m, k, n, in_dtype=dt) for m, k, n in sorted(shapes)]
+
+
 def layer_windows(cfg) -> Optional[jax.Array]:
     """Per-layer sliding windows as a scannable array (hybrid archs)."""
     if cfg.attn_window is None:
@@ -222,7 +244,7 @@ def layer_apply(
         x = x + y
     elif "mlp" in lp:
         h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
-        x = x + layers.mlp_apply(lp["mlp"], h2)
+        x = x + layers.mlp_apply(lp["mlp"], h2, cfg)
 
     return x, (new_cache or None), aux
 
@@ -254,7 +276,7 @@ def encode(params: Params, frames: jax.Array, cfg) -> jax.Array:
         ).transpose(0, 2, 1, 3).reshape(b, s, hh * dh)
         x = x + jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"])
         h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
-        x = x + layers.mlp_apply(lp["mlp"], h2)
+        x = x + layers.mlp_apply(lp["mlp"], h2, cfg)
         return x, None
 
     x, _ = jax.lax.scan(

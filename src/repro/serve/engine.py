@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune
 from repro.models import lm
 
 
@@ -63,10 +64,27 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, max_len=max_len, dist=dist)
         )
+        self._warmed = set()
+
+    def _warm_autotune(self, batch: int, seq: int) -> None:
+        """Populate the dataflow-spec cache for this request shape so the
+        prefill and decode traces hit memoized specs instead of
+        enumerating the explorer's candidate space.  Only runs when the
+        model will actually take the Pallas kernel path."""
+        if not (getattr(self.cfg, "use_pallas_kernels", False)
+                and jax.default_backend() == "tpu"):
+            return
+        key = (batch, seq)
+        if key in self._warmed:
+            return
+        self._warmed.add(key)
+        autotune.warm(lm.hot_gemm_problems(self.cfg, batch, seq)
+                      + lm.hot_gemm_problems(self.cfg, batch, 1))
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  greedy: bool = True, seed: int = 0) -> np.ndarray:
         """prompts: (B, S) equal-length int32. Returns (B, new) tokens."""
+        self._warm_autotune(prompts.shape[0], prompts.shape[1])
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
         outs = []
         key = jax.random.PRNGKey(seed)

@@ -1,0 +1,285 @@
+"""Fused-epilogue kernels, single-dispatch WS/IS, and the autotune cache.
+
+Oracle for every comparison is ``ref.matmul_fused_ref`` (jnp matmul +
+bias + activation + dequant + residual), run in interpret mode.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autotune
+from repro.core.dataflow import (
+    DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
+)
+from repro.kernels.matmul_df import matmul_df
+from repro.kernels import ops, ref
+
+BLOCK = (128, 128, 128)
+SPECS = {
+    "os_basic": DataflowSpec.basic(OS, block=BLOCK),
+    "os_w_stripe": DataflowSpec(OS, {WS: Residency.STRIPE}, (WS,), BLOCK),
+    "os_w_whole_i_stripe": DataflowSpec(
+        OS, {WS: Residency.WHOLE, IS: Residency.STRIPE}, (WS, IS), BLOCK),
+    "ws_basic": DataflowSpec.basic(WS, block=BLOCK),
+    "ws_o_stripe": DataflowSpec(WS, {OS: Residency.STRIPE}, (OS,), BLOCK),
+    "ws_i_stripe": DataflowSpec(WS, {IS: Residency.STRIPE}, (IS,), BLOCK),
+    "is_basic": DataflowSpec.basic(IS, block=BLOCK),
+    "is_o_stripe": DataflowSpec(IS, {OS: Residency.STRIPE}, (OS,), BLOCK),
+    "is_b_whole": DataflowSpec(IS, {WS: Residency.WHOLE}, (WS,), BLOCK),
+}
+EPILOGUES = {
+    "scale_bias_gelu_res": dict(scale=True, bias=True, activation="gelu",
+                                residual=True),
+    "bias_relu": dict(bias=True, activation="relu"),
+    "silu": dict(activation="silu"),
+    "scale": dict(scale=True),
+}
+
+
+def _operands(m, k, n, seed, in_dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(in_dtype, jnp.integer):
+        a = jnp.asarray(rng.integers(-127, 128, (m, k)), in_dtype)
+        b = jnp.asarray(rng.integers(-127, 128, (k, n)), in_dtype)
+    else:
+        a = jnp.asarray(rng.normal(size=(m, k)), in_dtype)
+        b = jnp.asarray(rng.normal(size=(k, n)), in_dtype)
+    bias = jnp.asarray(rng.normal(size=(1, n)), jnp.float32)
+    scale = jnp.asarray([[rng.uniform(0.01, 0.5)]], jnp.float32)
+    residual = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    return a, b, bias, scale, residual
+
+
+@pytest.mark.parametrize("epi_name", sorted(EPILOGUES))
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_fused_epilogue_all_dataflows_f32(spec_name, epi_name):
+    m, k, n = 256, 384, 512
+    a, b, bias, scale, residual = _operands(
+        m, k, n, hash((spec_name, epi_name)) % 2 ** 31)
+    flags = EPILOGUES[epi_name]
+    epi = Epilogue(
+        bias=flags.get("bias", False),
+        activation=flags.get("activation"),
+        scale=flags.get("scale", False),
+        residual=flags.get("residual", False),
+    )
+    out = matmul_df(
+        a, b, SPECS[spec_name], interpret=True, epilogue=epi,
+        scale=scale if epi.scale else None,
+        bias=bias if epi.bias else None,
+        residual=residual if epi.residual else None,
+    )
+    want = ref.matmul_fused_ref(
+        a, b,
+        bias=bias if epi.bias else None,
+        scale=scale if epi.scale else None,
+        residual=residual if epi.residual else None,
+        activation=epi.activation,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("spec_name",
+                         ["os_basic", "ws_basic", "ws_o_stripe",
+                          "is_basic", "is_o_stripe"])
+def test_int8_fused_dequant(spec_name):
+    m, k, n = 256, 256, 384
+    a, b, bias, _, residual = _operands(m, k, n, 11, jnp.int8)
+    a_scale, b_scale = jnp.float32(0.013), jnp.float32(0.021)
+    out = ops.int8_matmul_fused(
+        a, b, a_scale, b_scale, bias=bias, residual=residual,
+        activation="silu", spec=SPECS[spec_name], backend="interpret",
+    )
+    want = ref.matmul_fused_ref(
+        a, b, scale=a_scale * b_scale, bias=bias, residual=residual,
+        activation="silu",
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("spec_name", ["os_basic", "ws_basic", "is_basic"])
+def test_bf16_fused(spec_name):
+    m, k, n = 256, 256, 256
+    a, b, bias, _, _ = _operands(m, k, n, 13, jnp.bfloat16)
+    out = ops.matmul_fused(a, b, bias=bias, activation="gelu",
+                           spec=SPECS[spec_name], backend="interpret")
+    want = ref.matmul_fused_ref(a, b, bias=bias, activation="gelu")
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("spec_name", ["os_basic", "ws_basic", "is_basic"])
+@pytest.mark.parametrize("shape", [(300, 200, 520), (100, 130, 70)])
+def test_fused_pads_ragged_shapes(spec_name, shape):
+    m, k, n = shape
+    a, b, bias, scale, residual = _operands(m, k, n, m * n)
+    out = ops.matmul_fused(
+        a, b, bias=bias, scale=scale, residual=residual,
+        activation="relu", spec=SPECS[spec_name], backend="interpret",
+    )
+    want = ref.matmul_fused_ref(a, b, bias=bias, scale=scale,
+                                residual=residual, activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_int8_fused_rejects_per_row_scale_even_when_square():
+    # m == n: a (M, 1) per-row scale must not slip through as per-column
+    aq = jnp.zeros((128, 128), jnp.int8)
+    bq = jnp.zeros((128, 128), jnp.int8)
+    with pytest.raises(ValueError, match="per-column"):
+        ops.int8_matmul_fused(aq, bq, jnp.ones((128, 1)), jnp.ones(()),
+                              backend="interpret")
+
+
+def test_fused_per_column_scale():
+    m, k, n = 256, 256, 384
+    a, b, bias, _, _ = _operands(m, k, n, 17)
+    rng = np.random.default_rng(18)
+    scale = jnp.asarray(rng.uniform(0.01, 0.5, (1, n)), jnp.float32)
+    out = ops.matmul_fused(a, b, bias=bias, scale=scale,
+                           spec=SPECS["os_basic"], backend="interpret")
+    want = ref.matmul_fused_ref(a, b, bias=bias, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Single-dispatch WS/IS regression.
+# ---------------------------------------------------------------------------
+from repro.core.jaxpr_utils import count_pallas_calls  # noqa: E402
+
+
+@pytest.mark.parametrize("spec_name", ["ws_o_stripe", "is_o_stripe"])
+def test_int8_fused_stripe_exact_for_deep_reductions(spec_name):
+    """Integer-input fused epilogues through the output-stripe writers
+    accumulate in an int32 scratch: running sums past 2**24 (where f32
+    accumulation starts dropping low bits) must still match the oracle's
+    single int32->f32 cast bit-for-bit."""
+    k = 2048
+    rng = np.random.default_rng(29)
+    a = jnp.asarray(rng.integers(100, 128, (128, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(100, 128, (k, 128)), jnp.int8)
+    one = jnp.float32(1.0)
+    out = ops.int8_matmul_fused(a, b, one, one, spec=SPECS[spec_name],
+                                backend="interpret")
+    want = ref.int8_matmul_ref(a, b, one, one)
+    assert float(jnp.max(jnp.abs(a.astype(jnp.int32) @ b.astype(jnp.int32))
+                         )) > 2 ** 24  # the regression regime
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("spec_name", ["ws_basic", "is_basic"])
+def test_rmw_accumulates_in_acc_dtype(spec_name):
+    """Deep int8 reductions through the single-dispatch WS/IS path must
+    stay bit-exact (int32 scratch accumulation, not output-dtype)."""
+    rng = np.random.default_rng(23)
+    k = 2048  # 16 reduction panels
+    a = jnp.asarray(rng.integers(-127, 128, (128, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (k, 128)), jnp.int8)
+    out = matmul_df(a, b, SPECS[spec_name], interpret=True)
+    assert out.dtype == jnp.int32
+    assert bool(jnp.all(out == ref.matmul_ref(a, b)))
+
+
+@pytest.mark.parametrize("spec_name", ["ws_basic", "is_basic",
+                                       "ws_i_stripe", "is_b_whole"])
+@pytest.mark.parametrize("gk", [2, 4])
+def test_ws_is_single_dispatch(spec_name, gk):
+    """Basic WS/IS must issue exactly ONE pallas_call regardless of the
+    reduction depth, and still match the oracle."""
+    m, n = 256, 256
+    k = 128 * gk
+    a, b, _, _, _ = _operands(m, k, n, gk)
+    spec = SPECS[spec_name]
+    jaxpr = jax.make_jaxpr(
+        lambda x, y: matmul_df(x, y, spec, interpret=True))(a, b)
+    assert count_pallas_calls(jaxpr.jaxpr) == 1, jaxpr
+    out = matmul_df(a, b, spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache.
+# ---------------------------------------------------------------------------
+def test_autotune_cache_hits_and_disk_roundtrip():
+    autotune.clear()
+    autotune.reset_stats()
+    p = GemmProblem(256, 512, 1024, in_dtype="float32")
+    s1 = autotune.best_spec(p, backend="interpret")
+    s2 = autotune.best_spec(p, backend="interpret")
+    st = autotune.stats()
+    assert s1 == s2
+    assert st["enumerations"] == 1 and st["hits"] == 1, st
+    # drop the in-process cache: the JSON store must serve the spec
+    autotune.clear()
+    autotune.reset_stats()
+    s3 = autotune.best_spec(p, backend="interpret")
+    st = autotune.stats()
+    assert s3 == s1 and st["enumerations"] == 0 and st["hits"] == 1, st
+
+
+def test_repeated_ops_matmul_does_not_reenumerate():
+    autotune.clear()
+    autotune.reset_stats()
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    o1 = ops.matmul(a, b, backend="interpret")
+    o2 = ops.matmul(a, b, backend="interpret")
+    st = autotune.stats()
+    assert st["enumerations"] <= 1, st
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_allclose(np.asarray(o1),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_autotune_key_distinguishes_dtype_and_backend():
+    p32 = GemmProblem(128, 128, 128, in_dtype="float32")
+    p8 = GemmProblem(128, 128, 128, in_dtype="int8")
+    from repro.core.cost_model import V5E
+
+    assert autotune._key(p32, V5E, "interpret") \
+        != autotune._key(p8, V5E, "interpret")
+    assert autotune._key(p32, V5E, "interpret") \
+        != autotune._key(p32, V5E, "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Epilogue spec validation + explorer satellite fixes.
+# ---------------------------------------------------------------------------
+def test_epilogue_validation():
+    with pytest.raises(ValueError):
+        Epilogue(activation="tanh")
+    assert Epilogue().is_noop
+    with pytest.raises(ValueError):
+        a = jnp.zeros((128, 128), jnp.float32)
+        matmul_df(a, a, SPECS["os_basic"], interpret=True,
+                  epilogue=Epilogue(bias=True))  # bias array missing
+
+
+def test_block_options_clamped_to_padded_dim():
+    from repro.core import cost_model, explorer
+
+    opts = explorer._block_options(300, cost_model.V5E)
+    assert opts == [128, 256]          # 512 > padded 384 is pruned
+    assert explorer._block_options(64, cost_model.V5E) == [128]
+    for cand in explorer.enumerate_candidates(
+            GemmProblem(300, 300, 300, in_dtype="float32")):
+        assert all(blk <= 384 for blk in cand.spec.block)
+
+
+def test_empirical_rank_honors_dtype():
+    from repro.core import explorer
+
+    p = GemmProblem(128, 128, 128, in_dtype="int8")
+    ranked = explorer.empirical_rank(
+        p, [SPECS["os_basic"], SPECS["ws_basic"]])
+    assert len(ranked) == 2 and all(sec > 0 for _, sec in ranked)
