@@ -1,0 +1,134 @@
+"""Fused-epilogue vs unfused conv + single-dispatch conv lowering.
+
+For each dataflow anchor, compares
+
+  unfused : ``ops.conv2d`` followed by the epilogue (dequant scale, bias,
+            silu, residual) as separate XLA ops — the raw accumulator
+            round-trips HBM between the kernel and its epilogue;
+  fused   : ``ops.conv2d_fused`` — one kernel dispatch, epilogue applied
+            in-register at the scratch flush.
+
+Emits CSV rows (``us_per_call`` = interpret-mode wall clock, ``derived``
+= "fused_calls/unfused_calls eqns=fused/unfused") and writes the full
+results to ``BENCH_conv.json`` at the repo root.  Also records that
+every conv anchor — including the previously panel-looped WS/IS — now
+issues exactly one ``pallas_call`` regardless of the reduction depth
+``n_r = fh*fw*ceil(cin/bc)``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.dataflow import DataflowSpec, IS, OS, WS
+from repro.core.jaxpr_utils import count_eqns, count_pallas_calls
+from repro.kernels import ops
+from repro.kernels.conv2d_df import conv2d_df
+
+CASE = dict(n=1, ih=14, iw=14, f=3, s=1, cin=128, cout=128)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_conv.json")
+
+
+def run(out_path: str = OUT_PATH) -> Dict:
+    c = CASE
+    rng = np.random.default_rng(0)
+    oh = (c["ih"] - c["f"]) // c["s"] + 1
+    ow = (c["iw"] - c["f"]) // c["s"] + 1
+    x = jnp.asarray(
+        rng.normal(size=(c["n"], c["ih"], c["iw"], c["cin"])), jnp.float32)
+    w = jnp.asarray(
+        rng.normal(size=(c["f"], c["f"], c["cin"], c["cout"])), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(c["cout"],)), jnp.float32)
+    scale = jnp.float32(0.37)
+    residual = jnp.asarray(
+        rng.normal(size=(c["n"], oh, ow, c["cout"])), jnp.float32)
+
+    results = {
+        "meta": {
+            "backend": "interpret",
+            "case": dict(CASE),
+            "epilogue": "scale+bias+silu+residual",
+            "note": "us_per_call is interpret-mode wall clock (CPU proxy); "
+                    "dispatch/eqn counts are backend-independent",
+        },
+        "rows": [],
+    }
+
+    anchors = [("os", DataflowSpec.basic(OS)),
+               ("ws", DataflowSpec.basic(WS)),
+               ("is", DataflowSpec.basic(IS))]
+    for name, spec in anchors:
+        def unfused(xx, ww):
+            acc = ops.conv2d(xx, ww, stride=c["s"], spec=spec, b_oh=4,
+                             backend="interpret")
+            return jax.nn.silu(scale * acc + bias) + residual
+
+        def fused(xx, ww):
+            return ops.conv2d_fused(
+                xx, ww, stride=c["s"], bias=bias, scale=scale,
+                residual=residual, activation="silu", spec=spec, b_oh=4,
+                backend="interpret",
+            )
+
+        jx_u = jax.make_jaxpr(unfused)(x, w)
+        jx_f = jax.make_jaxpr(fused)(x, w)
+        row = {
+            "name": name,
+            "fused_pallas_calls": count_pallas_calls(jx_f.jaxpr),
+            "unfused_pallas_calls": count_pallas_calls(jx_u.jaxpr),
+            "fused_eqns": count_eqns(jx_f.jaxpr),
+            "unfused_eqns": count_eqns(jx_u.jaxpr),
+            "fused_us": round(time_fn(fused, x, w), 1),
+            "unfused_us": round(time_fn(unfused, x, w), 1),
+        }
+        # one dispatch per conv, fused or not (eqn counts are reported
+        # for reference — the fused kernel's in-register epilogue and
+        # operand padding trade a handful of trace eqns for removing the
+        # accumulator's HBM round trip, which eqn counts don't measure)
+        assert row["fused_pallas_calls"] == 1, row
+        assert row["unfused_pallas_calls"] == 1, row
+        results["rows"].append(row)
+        emit(
+            f"conv/{name}", row["fused_us"],
+            f"calls={row['fused_pallas_calls']}/{row['unfused_pallas_calls']}"
+            f" eqns={row['fused_eqns']}/{row['unfused_eqns']}",
+        )
+        emit(f"conv/{name}_unfused", row["unfused_us"], "")
+
+    # single-dispatch WS/IS conv: one pallas_call regardless of the
+    # reduction depth n_r (previously n_r aliased calls + zeros init)
+    by_anchor = {}
+    for name, spec in anchors[1:]:
+        by_nr = {}
+        for f in (1, 3, 5):
+            oh_ = 12
+            ihp = oh_ - 1 + f
+            xx = jnp.zeros((1, ihp, ihp, 128), jnp.float32)
+            ww = jnp.zeros((f, f, 128, 128), jnp.float32)
+            jx = jax.make_jaxpr(
+                lambda a, b: conv2d_df(a, b, 1, spec, oh=oh_, ow=oh_,
+                                       b_oh=4, interpret=True))(xx, ww)
+            by_nr[str(f * f)] = count_pallas_calls(jx.jaxpr)
+        assert set(by_nr.values()) == {1}, (name, by_nr)
+        by_anchor[name] = by_nr
+        emit(f"conv/{name}_single_dispatch", 0.0,
+             "calls_by_nr=" + "/".join(f"{k}:{v}" for k, v in by_nr.items()))
+    results["pallas_calls_by_nr"] = by_anchor
+
+    try:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+            f.write("\n")
+    except OSError:
+        pass
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -6,7 +6,7 @@ artifacts (python -m repro.launch.dryrun --all); it is skipped with a
 note if they are absent.
 
 ``--suites a,b`` runs a comma-separated subset (CI smoke uses
-``--suites fig2_basic_dataflows,fused_epilogue``).
+``--suites fig2_basic_dataflows,fused_epilogue,fused_conv``).
 """
 from __future__ import annotations
 
@@ -19,6 +19,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_basic_dataflows,
         bench_binary,
+        bench_conv,
         bench_e2e_int8,
         bench_extended_dataflows,
         bench_fused,
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
         ("fig8_e2e_int8", bench_e2e_int8.run),
         ("fig9_binary", bench_binary.run),
         ("fused_epilogue", bench_fused.run),
+        ("fused_conv", bench_conv.run),
         ("roofline", bench_roofline.run),
     ]
     ap = argparse.ArgumentParser(description=__doc__)

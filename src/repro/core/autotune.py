@@ -5,10 +5,20 @@ enumerated and ranked at most once per distinct workload, per process —
 and, via a small on-disk JSON store, at most once per machine.
 
 Key schema (``_key``): a flat string over every field that changes the
-ranking —
+ranking.  GEMM problems —
 
     v<CACHE_VERSION>|m|k|n|in_dtype|out_dtype|acc_dtype
                     |hw=<name>|vmem=<bytes>|backend=<pallas/interpret/xla>
+
+Conv problems (``ConvProblem``) key on the full conv geometry instead of
+the implicit-GEMM collapse (two convs with the same GEMM view but
+different filter/stride have different window reuse and VMEM needs) —
+
+    v<CACHE_VERSION>|conv|n|ih|iw|fh|fw|s|cin|cout|in_dtype|out_dtype
+                    |hw=<name>|vmem=<bytes>|backend=<...>
+
+and resolve through ``explorer.explore_conv`` (conv-blocked specs whose
+``block`` is ``(b_oh, bc, bk)``; see ``cost_model.conv_gemm_view``).
 
 Disk location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.  Invalidation: entries embed the key
@@ -16,6 +26,10 @@ schema version, so bumping ``CACHE_VERSION`` (e.g. when the cost model
 or kernel lowering changes materially) orphans every stale entry;
 deleting the file forces a full re-tune.  Disk I/O is best-effort — a
 read-only filesystem degrades to the in-process cache.
+
+``CACHE_VERSION`` history: 1 = GEMM-only keys (PR 1); 2 = conv keys
+added alongside the single-dispatch conv lowering (PR 2) — the conv
+kernel change shifts realized traffic, so v1 entries are orphaned.
 
 An optional *empirical refinement* pass (``refine=True``) re-ranks the
 analytical top-k by interpret-mode wall clock (``explorer.empirical_rank``)
@@ -28,17 +42,20 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Union
 
 from repro.core import cost_model, explorer
 from repro.core.dataflow import (
+    ConvProblem,
     DataflowSpec,
     GemmProblem,
     Residency,
     Stationarity,
 )
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+
+Problem = Union[GemmProblem, ConvProblem]
 
 _memory: Dict[str, DataflowSpec] = {}
 _disk_loaded = False
@@ -51,12 +68,22 @@ _stats = {
 }
 
 
-def _key(problem: GemmProblem, hw: cost_model.HardwareSpec,
+def _key(problem: Problem, hw: cost_model.HardwareSpec,
          backend: str) -> str:
+    if isinstance(problem, ConvProblem):
+        head = [
+            "conv", str(problem.n), str(problem.ih), str(problem.iw),
+            str(problem.fh), str(problem.fw), str(problem.s),
+            str(problem.cin), str(problem.cout),
+            problem.in_dtype, problem.out_dtype,
+        ]
+    else:
+        head = [
+            str(problem.m), str(problem.k), str(problem.n),
+            problem.in_dtype, problem.out_dtype, problem.acc_dtype,
+        ]
     return "|".join([
-        f"v{CACHE_VERSION}",
-        str(problem.m), str(problem.k), str(problem.n),
-        problem.in_dtype, problem.out_dtype, problem.acc_dtype,
+        f"v{CACHE_VERSION}", *head,
         f"hw={hw.name}", f"vmem={hw.vmem_bytes}", f"backend={backend}",
     ])
 
@@ -134,13 +161,19 @@ def _save_disk() -> None:
 
 
 def best_spec(
-    problem: GemmProblem,
+    problem: Problem,
     hw: cost_model.HardwareSpec = cost_model.V5E,
     backend: str = "pallas",
     refine: bool = False,
     refine_top: int = 3,
 ) -> DataflowSpec:
-    """Cached ``explorer.best_spec`` for ``problem`` on ``hw``/``backend``."""
+    """Cached explorer pick for ``problem`` on ``hw``/``backend``.
+
+    ``GemmProblem``s rank via ``explorer.explore``; ``ConvProblem``s via
+    ``explorer.explore_conv`` and return *conv-blocked* specs (``block``
+    = ``(b_oh, bc, bk)``).  Empirical refinement applies to GEMM
+    problems only (the interpret-mode re-rank runs ``ops.matmul``).
+    """
     _load_disk()
     key = _key(problem, hw, backend)
     _stats["lookups"] += 1
@@ -150,11 +183,13 @@ def best_spec(
         return spec
     _stats["misses"] += 1
     _stats["enumerations"] += 1
-    ranked = explorer.explore(problem, hw, top=max(1, refine_top))
+    is_conv = isinstance(problem, ConvProblem)
+    ranked = (explorer.explore_conv if is_conv else explorer.explore)(
+        problem, hw, top=max(1, refine_top))
     if not ranked:
         raise ValueError(f"no feasible dataflow for {problem}")
     spec = ranked[0].spec
-    if refine and len(ranked) > 1:
+    if refine and not is_conv and len(ranked) > 1:
         measured = explorer.empirical_rank(
             problem, [c.spec for c in ranked], interpret=True
         )
@@ -166,20 +201,28 @@ def best_spec(
 
 
 def warm(
-    problems: Iterable[GemmProblem],
+    problems: Iterable[Problem],
     hw: cost_model.HardwareSpec = cost_model.V5E,
     backend: str = "pallas",
 ) -> List[DataflowSpec]:
-    """Pre-populate the cache for a known set of hot workloads.
+    """Pre-populate the cache for a known set of hot workloads (GEMM and
+    conv problems mix freely).
 
     Misses are batched into a single disk write at the end instead of
-    one full-store rewrite per problem.
+    one full-store rewrite per problem.  Problems with no feasible
+    dataflow (e.g. a conv whose image exceeds VMEM) are skipped rather
+    than aborting the warm-up — the op will raise at call time instead.
     """
     global _defer_save
     before = _stats["misses"]
     _defer_save = True
+    specs = []
     try:
-        specs = [best_spec(p, hw, backend) for p in problems]
+        for p in problems:
+            try:
+                specs.append(best_spec(p, hw, backend))
+            except ValueError:
+                continue
     finally:
         _defer_save = False
     if _stats["misses"] > before:

@@ -318,6 +318,60 @@ def conv_traffic(p: ConvProblem, spec: DataflowSpec) -> Traffic:
     return Traffic(reads, dict(t.writes), t.vmem_peak, t.feasible)
 
 
+def conv_gemm_view(p: ConvProblem, spec: DataflowSpec) -> DataflowSpec:
+    """Map a conv-blocked spec to its implicit-GEMM blocking.
+
+    A *conv-blocked* spec stores ``block = (b_oh, bc, bk)`` — the output
+    row-tile height, the cin reduction panel, and the cout tile realized
+    by ``kernels.conv2d_df``.  One output tile covers ``b_oh * ow`` GEMM
+    rows, one reduction panel ``bc`` of the ``R * cin`` reduction, and
+    one cout tile ``bk`` GEMM columns.
+    """
+    b_oh, bc, bk = spec.block
+    return spec.with_block((max(1, b_oh) * p.ow, bc, bk))
+
+
+def conv_vmem_footprint(p: ConvProblem, spec: DataflowSpec) -> int:
+    """Peak VMEM bytes claimed by the realized conv kernel.
+
+    Mirrors ``gemm_vmem_footprint`` for ``kernels.conv2d_df``'s actual
+    lowering (``spec.block`` is conv-blocked, see ``conv_gemm_view``):
+    the padded input image is whole-resident, one (fh, fw, C, bk) weight
+    block and one (b_oh, ow, bk) output block are double-buffered, and
+    the scratch accumulator holds one output tile in the acc dtype.
+    """
+    b_oh, bc, bk = spec.block
+    ib, ob = dtype_bytes(p.in_dtype), dtype_bytes(p.out_dtype)
+    ab = 4  # int32 / float32 accumulator
+    cpad = _ceil(p.cin, bc) * bc
+    kpad = _ceil(p.cout, bk) * bk
+    b_oh = min(b_oh, p.oh)
+    oh_pad = _ceil(p.oh, b_oh) * b_oh
+    ih_pad = (oh_pad - 1) * p.s + p.fh + (p.s - 1)
+    iw_pad = (p.ow - 1) * p.s + p.fw + (p.s - 1)
+    foot = ih_pad * iw_pad * cpad * ib                # whole-resident image
+    foot += 2 * p.fh * p.fw * cpad * min(bk, kpad) * ib
+    foot += 2 * b_oh * p.ow * min(bk, kpad) * ob
+    foot += b_oh * p.ow * min(bk, kpad) * ab
+    return foot
+
+
+def conv_time_estimate(
+    p: ConvProblem, spec: DataflowSpec, hw: HardwareSpec = V5E
+) -> float:
+    """max(compute, memory) estimate for ranking *conv-blocked* specs.
+
+    Traffic comes from ``conv_traffic`` on the implicit-GEMM view of the
+    blocking; feasibility from ``conv_vmem_footprint`` (the realized
+    kernel's residency, not the GEMM tiling's).
+    """
+    t = conv_traffic(p, conv_gemm_view(p, spec))
+    tc = p.flops / hw.peak_flops_for(p.in_dtype)
+    tm = t.total / hw.hbm_bw
+    feasible = conv_vmem_footprint(p, spec) <= spec.vmem_budget
+    return max(tc, tm) + (0.0 if feasible else float("inf"))
+
+
 # ---------------------------------------------------------------------------
 # 3. Roofline terms (EXPERIMENTS.md §Roofline).
 # ---------------------------------------------------------------------------

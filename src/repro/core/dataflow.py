@@ -70,8 +70,9 @@ class Epilogue:
     Attributes:
       bias: add a per-output-column bias vector of shape (1, N).
       activation: one of ``EPILOGUE_ACTIVATIONS`` or None.
-      scale: multiply by a dequantization scale — shape (1, 1) (per-tensor)
-        or (1, N) (per-column), e.g. ``a_scale * b_scale`` of an int8 GEMM.
+      scale: multiply by a dequantization scale — shape (1, 1)
+        (per-tensor), (1, N) (per-column) or, for the matmul kernels,
+        (M, 1) (per-row), e.g. ``a_scale * b_scale`` of an int8 GEMM.
       residual: add a residual tensor of the full output shape (M, N).
 
     The spec is hashable (a jit static argument); the actual operand

@@ -124,6 +124,68 @@ def best_spec(
     return ranked[0].spec
 
 
+# ---------------------------------------------------------------------------
+# Conv candidate space (the shapes kernels/conv2d_df actually realizes).
+# ---------------------------------------------------------------------------
+def _b_oh_options(oh: int) -> List[int]:
+    """Output row-tile heights, clamped to the output height."""
+    return [b for b in (4, 8, 16) if b <= oh] or [max(1, oh)]
+
+
+def enumerate_conv_candidates(
+    problem: ConvProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    anchors: Sequence[Stationarity] = (OS, WS, IS),
+) -> List[Candidate]:
+    """All conv dataflows realizable by ``kernels.conv2d_df``.
+
+    Per anchor the kernel admits exactly one residency shape — the input
+    image is whole-resident under OS (fetched once per batch element),
+    anchored under IS, and re-streamed per cout tile under WS — so the
+    space is anchors x conv block choices ``(b_oh, bc, bk)`` clamped to
+    the (lane-padded) problem dims.  Specs are *conv-blocked*; ranking
+    uses ``cost_model.conv_time_estimate`` (implicit-GEMM traffic +
+    realized-kernel VMEM feasibility).
+    """
+    aux_for = {
+        OS: {IS: Residency.WHOLE},
+        WS: {},
+        IS: {},
+    }
+    out: List[Candidate] = []
+    for anchor in anchors:
+        aux = aux_for[anchor]
+        pri = tuple(aux.keys())
+        for b_oh, bc, bk in itertools.product(
+            _b_oh_options(problem.oh),
+            _block_options(problem.cin, hw),
+            _block_options(problem.cout, hw),
+        ):
+            spec = DataflowSpec(
+                anchor=anchor, aux=aux, aux_priority=pri,
+                block=(b_oh, bc, bk), vmem_budget=hw.vmem_bytes,
+            )
+            if cost_model.conv_vmem_footprint(problem, spec) > hw.vmem_bytes:
+                continue
+            t = cost_model.conv_traffic(
+                problem, cost_model.conv_gemm_view(problem, spec))
+            est = max(problem.flops / hw.peak_flops_for(problem.in_dtype),
+                      t.total / hw.hbm_bw)  # feasible: no infinity penalty
+            out.append(Candidate(spec, est, t.total, True))
+    return out
+
+
+def explore_conv(
+    problem: ConvProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    top: int = 5,
+    **kw,
+) -> List[Candidate]:
+    """Ranked conv-blocked candidates (best first)."""
+    cands = enumerate_conv_candidates(problem, hw, **kw)
+    return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
+
+
 def measure(
     fn: Callable, args: Tuple, iters: int = 5, warmup: int = 2
 ) -> float:

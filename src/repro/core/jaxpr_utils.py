@@ -25,10 +25,16 @@ def _walk(jaxpr, visit) -> int:
     return count
 
 
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` anywhere in ``jaxpr``
+    (recursing into sub-jaxprs)."""
+    return _walk(jaxpr, lambda eqn: eqn.primitive.name == name)
+
+
 def count_pallas_calls(jaxpr) -> int:
     """Number of ``pallas_call`` primitives anywhere in ``jaxpr``
     (recursing into sub-jaxprs) — i.e. kernel dispatches per trace."""
-    return _walk(jaxpr, lambda eqn: eqn.primitive.name == "pallas_call")
+    return count_primitive(jaxpr, "pallas_call")
 
 
 def count_eqns(jaxpr) -> int:

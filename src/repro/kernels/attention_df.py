@@ -127,10 +127,27 @@ def flash_attention(
 # WS-anchored (KV-stationary) attention: benchmark variant.
 # ---------------------------------------------------------------------------
 def _kv_stationary_kernel(q_ref, k_ref, v_ref, acc_in, m_in, l_in,
-                          acc_out, m_out, l_out, *, jk: int, bq: int,
-                          bkv: int, scale: float, causal: bool,
+                          acc_out, m_out, l_out, *, jk: Optional[int],
+                          bq: int, bkv: int, scale: float, causal: bool,
                           window: Optional[int], sq: int, skv_valid: int):
-    iq = pl.program_id(1)
+    """One KV block's online-softmax update.
+
+    ``jk=None``: single-dispatch form — the KV sweep is grid dim 1, the
+    state refs are the revisited output buffers (in == out), initialized
+    in-kernel at the first KV block.  ``jk=int``: per-block form — one
+    call per KV block, state carried through aliased input/output pairs.
+    """
+    if jk is None:
+        jk_idx, iq = pl.program_id(1), pl.program_id(2)
+
+        @pl.when(jk_idx == 0)
+        def _init():
+            acc_in[...] = jnp.zeros_like(acc_in)
+            m_in[...] = jnp.full_like(m_in, NEG_INF)
+            l_in[...] = jnp.zeros_like(l_in)
+    else:
+        jk_idx, iq = jk, pl.program_id(1)
+
     q = q_ref[0].astype(jnp.float32)
     k = k_ref[0].astype(jnp.float32)
     v = v_ref[0].astype(jnp.float32)
@@ -138,7 +155,7 @@ def _kv_stationary_kernel(q_ref, k_ref, v_ref, acc_in, m_in, l_in,
 
     qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
         + (skv_valid - sq)
-    kpos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    kpos = jk_idx * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
     mask = kpos < skv_valid
     if causal:
         mask &= kpos <= qpos
@@ -159,6 +176,11 @@ def _kv_stationary_kernel(q_ref, k_ref, v_ref, acc_in, m_in, l_in,
     l_out[0] = jnp.broadcast_to(l_new, l_out.shape[1:])
 
 
+def _kv_single_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, **kw):
+    _kv_stationary_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                          acc_ref, m_ref, l_ref, **kw)
+
+
 def kv_stationary_attention(
     q: jax.Array, k: jax.Array, v: jax.Array,
     group: int = 1, causal: bool = True, window: Optional[int] = None,
@@ -166,44 +188,75 @@ def kv_stationary_attention(
     sq_valid: Optional[int] = None,
     bq: int = 128, bkv: int = 128, interpret: bool = False,
 ) -> jax.Array:
-    """WS-anchored attention: each KV block fetched once; (acc, m, l)
-    partials round-trip HBM once per KV block (paper's WS traffic)."""
+    """WS-anchored attention: each KV block fetched exactly once, the
+    (acc, m, l) running partials round-tripping HBM once per KV block
+    (the paper's WS output traffic).
+
+    In interpret mode — where this benchmark variant runs and is
+    compared against flash attention — it lowers as ONE ``pallas_call``
+    with grid (bh, gkv, gq): the state blocks, indexed by the *inner*
+    q-tile dim, are revisited once per KV block and carry the partials
+    between non-consecutive visits through their HBM buffers
+    (initialized in-kernel at the first KV block, no zeros-init arrays),
+    so per-block dispatch overhead no longer pollutes the OS/WS
+    comparison.  Persisting output blocks across non-consecutive
+    revisits relies on sequential grid execution — an interpret-mode
+    property, not a documented Pallas TPU guarantee — so on compiled
+    backends the realized lowering stays the well-defined per-KV-block
+    aliased-call loop (same traffic, gkv dispatches).
+    """
     bh, sq, d = q.shape
     skv = k.shape[1]
     gq, gkv = sq // bq, skv // bkv
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     skv_valid = skv if skv_valid is None else skv_valid
     sq_valid = sq if sq_valid is None else sq_valid
+    kw = dict(bq=bq, bkv=bkv, scale=scale, causal=causal, window=window,
+              sq=sq_valid, skv_valid=skv_valid)
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
+        jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
+        jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
+    ]
 
-    acc = jnp.zeros((bh, sq, d), jnp.float32)
-    m = jnp.full((bh, sq, 128), NEG_INF, jnp.float32)
-    l = jnp.zeros((bh, sq, 128), jnp.float32)
-    state_spec = pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0))
-    stat_spec = pl.BlockSpec((1, bq, 128), lambda b, i: (b, i, 0))
-    for jk in range(gkv):
-        kernel = functools.partial(
-            _kv_stationary_kernel, jk=jk, bq=bq, bkv=bkv, scale=scale,
-            causal=causal, window=window, sq=sq_valid, skv_valid=skv_valid,
-        )
+    if interpret:
+        state_spec = pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0))
+        stat_spec = pl.BlockSpec((1, bq, 128), lambda b, j, i: (b, i, 0))
         acc, m, l = pl.pallas_call(
-            kernel,
-            grid=(bh, gq),
+            functools.partial(_kv_single_kernel, jk=None, **kw),
+            grid=(bh, gkv, gq),
             in_specs=[
-                pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
                 pl.BlockSpec((1, bkv, d),
-                             lambda b, i, j=jk, g=group: (b // g, j, 0)),
+                             lambda b, j, i, g=group: (b // g, j, 0)),
                 pl.BlockSpec((1, bkv, d),
-                             lambda b, i, j=jk, g=group: (b // g, j, 0)),
-                state_spec, stat_spec, stat_spec,
+                             lambda b, j, i, g=group: (b // g, j, 0)),
             ],
             out_specs=[state_spec, stat_spec, stat_spec],
-            out_shape=[
-                jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
-                jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
-                jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
-            ],
-            input_output_aliases={3: 0, 4: 1, 5: 2},
-            interpret=interpret,
-        )(q, k, v, acc, m, l)
+            out_shape=out_shape,
+            interpret=True,
+        )(q, k, v)
+    else:
+        acc = jnp.zeros((bh, sq, d), jnp.float32)
+        m = jnp.full((bh, sq, 128), NEG_INF, jnp.float32)
+        l = jnp.zeros((bh, sq, 128), jnp.float32)
+        state_spec = pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0))
+        stat_spec = pl.BlockSpec((1, bq, 128), lambda b, i: (b, i, 0))
+        for jk in range(gkv):
+            acc, m, l = pl.pallas_call(
+                functools.partial(_kv_stationary_kernel, jk=jk, **kw),
+                grid=(bh, gq),
+                in_specs=[
+                    pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+                    pl.BlockSpec((1, bkv, d),
+                                 lambda b, i, j=jk, g=group: (b // g, j, 0)),
+                    pl.BlockSpec((1, bkv, d),
+                                 lambda b, i, j=jk, g=group: (b // g, j, 0)),
+                    state_spec, stat_spec, stat_spec,
+                ],
+                out_specs=[state_spec, stat_spec, stat_spec],
+                out_shape=out_shape,
+                input_output_aliases={3: 0, 4: 1, 5: 2},
+            )(q, k, v, acc, m, l)
     lsafe = jnp.where(l[:, :, :1] == 0.0, 1.0, l[:, :, :1])
     return (acc / lsafe).astype(q.dtype)

@@ -4,26 +4,53 @@ TPU adaptation of the paper's conv dataflows (DESIGN.md §2):
   * channel-last tiling = the paper's NCHWc with c = 128 lanes;
   * the input image is held **whole-resident** in VMEM (input auxiliary
     stationarity — conv inputs at the paper's scales fit comfortably);
-  * weights are stripe-resident per output-channel tile;
-  * anchor OS: reduction (ky, kx, cin-block) innermost, fp32/int32 scratch
-    accumulator, output written once;
-  * anchor WS: one aliased pallas_call per (ky, kx, cin-block) reduction
-    panel — outputs round-trip HBM each step (the paper's WS traffic).
+  * weights are stripe-resident per output-channel tile.
 
-Shapes must be pre-padded by ``ops.conv2d`` (lane-aligned channels, halo
-rows/cols for the strided window loads).
+Every anchor lowers as ONE ``pl.pallas_call`` with the ``(ky, kx,
+cin-block)`` reduction innermost in the grid and a VMEM scratch
+accumulator in the accumulator dtype; only the final, post-epilogue
+value reaches HBM.  The anchors differ solely in the order of the outer
+grid dimensions, which decides which operand's block index is held
+constant (= fetched once) across the sweep:
+
+  anchor=OS : grid (n, goh, gk, n_r) — output tile fixed while the
+              reduction runs; the input image is fetched once per batch
+              element (whole-resident auxiliary input stationarity).
+  anchor=WS : grid (gk, n, goh, n_r) — the (fh, fw, C, bk) weight block
+              is anchored outermost and fetched exactly once; the input
+              image re-streams per output-channel tile.
+  anchor=IS : grid (n, gk, goh, n_r) — the input image is anchored and
+              fetched exactly once per batch element; weight blocks
+              re-stream per image.
+
+The previous lowering realized WS/IS as one aliased ``pallas_call`` per
+reduction panel — ``n_r`` dispatches plus a ``jnp.zeros`` output init,
+each round-tripping the full output through HBM.  The single-dispatch
+form keeps those partial-sum round trips in VMEM; the analytic cost
+model (``cost_model.conv_traffic``) intentionally keeps the paper's RMW
+output accounting for basic WS/IS so the explorer's ranking stays
+comparable with the paper's tables (same treatment as ``matmul_df``).
+
+Fused epilogues: an ``Epilogue`` (dequant scale, bias, activation,
+residual — ``core.dataflow.Epilogue``) is applied in-register at the
+scratch flush of every anchor, so the raw accumulator never touches HBM
+and the one output write carries the post-epilogue values.
+
+Shapes must be pre-padded by ``ops.conv2d`` / ``ops.conv2d_fused``
+(lane-aligned channels, halo rows/cols for the strided window loads).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.dataflow import DataflowSpec, Stationarity, OS, WS, IS
+from repro.core.dataflow import DataflowSpec, Epilogue, OS, WS, IS
+from repro.kernels.matmul_df import _apply_epilogue, _epi_operands, _read_epi
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
@@ -40,8 +67,12 @@ def _strided_window(x, b_oh: int, ow: int, s: int):
     return x
 
 
-def _os_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh, fw, gc, bc, b_oh,
-                    ow, s, n_r):
+def _conv_kernel(x_ref, w_ref, *refs, fw: int, gc: int, bc: int, b_oh: int,
+                 ow: int, s: int, n_r: int, tid: int,
+                 epi: Optional[Epilogue]):
+    o_ref, acc_ref = refs[-2], refs[-1]
+    epi_refs = refs[:-2]
+    t = pl.program_id(tid)
     r = pl.program_id(3)
     ky = r // (fw * gc)
     kx = (r // gc) % fw
@@ -51,7 +82,6 @@ def _os_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh, fw, gc, bc, b_oh,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    t = pl.program_id(1)
     row0 = t * b_oh * s + ky
     xs = x_ref[0, pl.dslice(row0, b_oh * s), pl.dslice(kx, ow * s),
                pl.dslice(cb * bc, bc)]
@@ -65,21 +95,15 @@ def _os_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh, fw, gc, bc, b_oh,
 
     @pl.when(r == n_r - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
-
-
-def _ws_conv_panel_kernel(x_ref, w_ref, o_in_ref, o_ref, *, ky, kx, cb, bc,
-                          b_oh, ow, s):
-    t = pl.program_id(1)
-    row0 = t * b_oh * s + ky
-    xs = x_ref[0, pl.dslice(row0, b_oh * s), pl.dslice(kx, ow * s),
-               pl.dslice(cb * bc, bc)]
-    xs = _strided_window(xs, b_oh, ow, s)
-    wv = w_ref[ky, kx, pl.dslice(cb * bc, bc), :]
-    part = jnp.dot(
-        xs.reshape(b_oh * ow, bc), wv, preferred_element_type=o_ref.dtype
-    ).reshape(1, b_oh, ow, -1)
-    o_ref[...] = o_in_ref[...] + part
+        # scale/bias blocks ((1, 1) / (1, bk)) broadcast over the
+        # (b_oh, ow, bk) accumulator; the residual block matches the
+        # output block and drops its leading batch dim
+        scale, bias, residual = _read_epi(epi, epi_refs)
+        if residual is not None:
+            residual = residual[0]
+        o_ref[0] = _apply_epilogue(
+            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+        )
 
 
 def conv2d_df(
@@ -94,8 +118,18 @@ def conv2d_df(
     bk: int = 128,
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Optional[Epilogue] = None,
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Direct conv under the given dataflow. Returns (N, oh, ow, K)."""
+    """Direct conv under the given dataflow. Returns (N, oh, ow, K).
+
+    With ``epilogue`` set, ``y = act(scale * acc + bias) + residual`` is
+    applied in-register before the output write: ``scale`` is (1, 1)
+    (per-tensor) or (1, K) (per-output-channel) float32, ``bias`` is
+    (1, K) float32, ``residual`` is (N, oh, ow, K).
+    """
     n, ih_pad, iw_pad, c = x.shape
     fh, fw, _, kout = w.shape
     if c % bc or kout % bk or oh % b_oh:
@@ -103,50 +137,80 @@ def conv2d_df(
                          f"oh={oh} b_oh={b_oh}")
     gc, gk, goh = c // bc, kout // bk, oh // b_oh
     n_r = fh * fw * gc
-    out_dtype = out_dtype or _acc_dtype(x.dtype)
+
+    epi = epilogue if (epilogue is not None and not epilogue.is_noop) else None
+    if epi is not None:
+        if epi.scale:
+            if scale is None:
+                raise ValueError("epilogue.scale set but no scale array")
+            if scale.shape not in ((1, 1), (1, kout)):
+                raise ValueError(
+                    f"scale shape {scale.shape} != (1,1)/(1,{kout})"
+                )
+        if epi.bias:
+            if bias is None:
+                raise ValueError("epilogue.bias set but no bias array")
+            if bias.shape != (1, kout):
+                raise ValueError(f"bias shape {bias.shape} != (1, {kout})")
+        if epi.residual:
+            if residual is None:
+                raise ValueError("epilogue.residual set but no residual array")
+            if residual.shape != (n, oh, ow, kout):
+                raise ValueError(
+                    f"residual shape {residual.shape} != "
+                    f"({n}, {oh}, {ow}, {kout})"
+                )
+    if out_dtype is None:
+        out_dtype = jnp.float32 if epi is not None else _acc_dtype(x.dtype)
+
+    # Grid order per anchor; the reduction r = (ky, kx, cin-block) is
+    # always innermost so the output tile's revisits are consecutive.
+    if spec.anchor == OS:
+        grid = (n, goh, gk, n_r)
+        bsel, tsel, jsel = (lambda g: g[0]), (lambda g: g[1]), (lambda g: g[2])
+        tid = 1
+    elif spec.anchor == WS:
+        grid = (gk, n, goh, n_r)
+        bsel, tsel, jsel = (lambda g: g[1]), (lambda g: g[2]), (lambda g: g[0])
+        tid = 2
+    elif spec.anchor == IS:
+        grid = (n, gk, goh, n_r)
+        bsel, tsel, jsel = (lambda g: g[0]), (lambda g: g[2]), (lambda g: g[1])
+        tid = 2
+    else:
+        raise ValueError(spec.anchor)
 
     x_spec = pl.BlockSpec((1, ih_pad, iw_pad, c),
-                          lambda b, t, j, *r: (b, 0, 0, 0))
-    w_spec = pl.BlockSpec((fh, fw, c, bk), lambda b, t, j, *r: (0, 0, 0, j))
-    o_spec = pl.BlockSpec((1, b_oh, ow, bk), lambda b, t, j, *r: (b, t, 0, j))
+                          lambda *g: (bsel(g), 0, 0, 0))
+    w_spec = pl.BlockSpec((fh, fw, c, bk), lambda *g: (0, 0, 0, jsel(g)))
+    o_spec = pl.BlockSpec((1, b_oh, ow, bk),
+                          lambda *g: (bsel(g), tsel(g), 0, jsel(g)))
 
-    if spec.anchor == OS:
-        kernel = functools.partial(
-            _os_conv_kernel, fh=fh, fw=fw, gc=gc, bc=bc, b_oh=b_oh, ow=ow,
-            s=stride, n_r=n_r,
-        )
-        return pl.pallas_call(
-            kernel,
-            grid=(n, goh, gk, n_r),
-            in_specs=[x_spec, w_spec],
-            out_specs=o_spec,
-            out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
-            scratch_shapes=[pltpu.VMEM((b_oh, ow, bk), _acc_dtype(x.dtype))],
-            interpret=interpret,
-        )(x, w)
+    epi_specs = []
+    if epi is not None:
+        if epi.scale:
+            if scale.shape == (1, 1):
+                epi_specs.append(pl.BlockSpec((1, 1), lambda *g: (0, 0)))
+            else:
+                epi_specs.append(
+                    pl.BlockSpec((1, bk), lambda *g: (0, jsel(g))))
+        if epi.bias:
+            epi_specs.append(pl.BlockSpec((1, bk), lambda *g: (0, jsel(g))))
+        if epi.residual:
+            epi_specs.append(pl.BlockSpec(
+                (1, b_oh, ow, bk), lambda *g: (bsel(g), tsel(g), 0, jsel(g))))
+    epi_args = _epi_operands(epi, scale, bias, residual)
 
-    if spec.anchor in (WS, IS):
-        # WS: anchored weight panel (ky, kx, cb) re-fetched never; outputs
-        # RMW HBM once per panel. (IS over conv degenerates to the same
-        # panel loop with the input resident — the paper notes IS conv
-        # becomes irregular for s>1; we realize it identically but keep the
-        # traffic distinction in the cost model.)
-        out = jnp.zeros((n, oh, ow, kout), out_dtype)
-        for r in range(n_r):
-            ky, kx, cb = r // (fw * gc), (r // gc) % fw, r % gc
-            kernel = functools.partial(
-                _ws_conv_panel_kernel, ky=ky, kx=kx, cb=cb, bc=bc, b_oh=b_oh,
-                ow=ow, s=stride,
-            )
-            out = pl.pallas_call(
-                kernel,
-                grid=(n, goh, gk),
-                in_specs=[x_spec, w_spec, o_spec],
-                out_specs=o_spec,
-                out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
-                input_output_aliases={2: 0},
-                interpret=interpret,
-            )(x, w, out)
-        return out
-
-    raise ValueError(spec.anchor)
+    kernel = functools.partial(
+        _conv_kernel, fw=fw, gc=gc, bc=bc, b_oh=b_oh, ow=ow, s=stride,
+        n_r=n_r, tid=tid, epi=epi,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, *epi_specs],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
+        scratch_shapes=[pltpu.VMEM((b_oh, ow, bk), _acc_dtype(x.dtype))],
+        interpret=interpret,
+    )(x, w, *epi_args)

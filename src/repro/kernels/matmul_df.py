@@ -46,7 +46,10 @@ bias, activation, residual — ``core.dataflow.Epilogue``) in-register at
 the point the accumulator is flushed: the OS scratch flush, the WS/IS
 stripe writers' final reduction visit, and the single-dispatch RMW
 path's last k step.  The raw accumulator never touches HBM; the one
-output write carries the post-epilogue values.
+output write carries the post-epilogue values.  Dequant scales may be
+per-tensor (1, 1), per-output-column (1, N), or per-row (M, 1) — the
+per-row form covers int8 per-activation-row quantization without
+falling back to the unfused path.
 
 Validated against ``ref.matmul_ref`` / ``ref.matmul_fused_ref`` in
 interpret mode (tests/test_kernels_matmul, tests/test_fused_epilogue).
@@ -137,21 +140,24 @@ def _epi_operands(epi: Optional[Epilogue], scale, bias, residual):
     return tuple(ops)
 
 
-def _epi_specs(epi: Optional[Epilogue], scale, bn: int,
-               scale_j, bias_j, res_block, res_map):
+def _epi_specs(epi: Optional[Epilogue], scale, bm: int, bn: int,
+               scale_i, scale_j, bias_j, res_block, res_map):
     """BlockSpecs for the epilogue operands.
 
-    ``scale_j``/``bias_j``: index maps returning the output column-block
-    index j from the grid ids; ``res_block``/``res_map`` describe the
-    residual block (matching the builder's output blocking).
+    ``scale_i``/``scale_j``/``bias_j``: index maps returning the output
+    row-block index i (per-row scales) or column-block index j from the
+    grid ids; ``res_block``/``res_map`` describe the residual block
+    (matching the builder's output blocking).
     """
     if epi is None:
         return []
     specs = []
     if epi.scale:
-        if scale.shape[1] == 1:  # per-tensor
+        if scale.shape == (1, 1):        # per-tensor
             specs.append(pl.BlockSpec((1, 1), lambda *g: (0, 0)))
-        else:                    # per-column
+        elif scale.shape[1] == 1:        # per-row (M, 1)
+            specs.append(pl.BlockSpec((bm, 1), scale_i))
+        else:                            # per-column (1, N)
             specs.append(pl.BlockSpec((1, bn), scale_j))
     if epi.bias:
         specs.append(pl.BlockSpec((1, bn), bias_j))
@@ -230,6 +236,10 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         _, j = ij(g0, g1)
         return (0, j)
 
+    def i_map(g0, g1, k):
+        i, _ = ij(g0, g1)
+        return (i, 0)
+
     a_block = (bm, kdim) if a_stripe else (bm, bk)
     b_block = {
         Residency.WHOLE: (kdim, n),
@@ -248,7 +258,8 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         in_specs=[
             pl.BlockSpec(a_block, a_map),
             pl.BlockSpec(b_block, b_map),
-            *_epi_specs(epi, scale, bn, j_map, j_map, (bm, bn), o_map),
+            *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
+                        (bm, bn), o_map),
         ],
         out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -357,6 +368,10 @@ def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         _, j, _ = idx(g0, g1, g2)
         return (0, j)
 
+    def i_map(g0, g1, g2):
+        i, _, _ = idx(g0, g1, g2)
+        return (i, 0)
+
     kernel = functools.partial(
         _rmw_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=b_res,
         m_minor=m_minor, epi=epi,
@@ -368,7 +383,8 @@ def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         in_specs=[
             pl.BlockSpec(a_block, a_map),
             pl.BlockSpec(b_block, b_map),
-            *_epi_specs(epi, scale, bn, j_map, j_map, (bm, bn), o_map),
+            *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
+                        (bm, bn), o_map),
         ],
         out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -426,6 +442,7 @@ def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         kernel = functools.partial(_ws_stripe_kernel, bm=bm, gk=gk, epi=epi,
                                    use_acc=use_acc)
         j_map = lambda j, k, i: (0, j)
+        i_map = lambda j, k, i: (i, 0)
         scale = epi_args[0] if (epi is not None and epi.scale) else None
         return pl.pallas_call(
             kernel,
@@ -433,7 +450,8 @@ def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda j, k, i: (i, k)),
                 pl.BlockSpec((bk, bn), lambda j, k, i: (k, j)),
-                *_epi_specs(epi, scale, bn, j_map, j_map, (m, bn), j_map),
+                *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
+                            (m, bn), j_map),
             ],
             out_specs=pl.BlockSpec((m, bn), lambda j, k, i: (0, j)),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -509,7 +527,8 @@ def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda i, k, j: (i, k)),
                 pl.BlockSpec(b_block, b_map),
-                *_epi_specs(epi, scale, bn, j_map, j_map, (bm, n), i_map),
+                *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
+                            (bm, n), i_map),
             ],
             out_specs=pl.BlockSpec((bm, n), lambda i, k, j: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -543,8 +562,10 @@ def matmul_df(
     automatic padding).
 
     With ``epilogue`` set, ``y = act(scale * acc + bias) + residual`` is
-    applied in-register before the output write: ``scale`` is (1, 1) or
-    (1, N) float32, ``bias`` is (1, N) float32, ``residual`` is (M, N).
+    applied in-register before the output write: ``scale`` is (1, 1)
+    (per-tensor), (1, N) (per-column) or (M, 1) (per-row — e.g. int8
+    per-activation-row dequant) float32, ``bias`` is (1, N) float32,
+    ``residual`` is (M, N).
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
@@ -560,8 +581,10 @@ def matmul_df(
         if epi.scale:
             if scale is None:
                 raise ValueError("epilogue.scale set but no scale array")
-            if scale.shape not in ((1, 1), (1, n)):
-                raise ValueError(f"scale shape {scale.shape} != (1,1)/(1,{n})")
+            if scale.shape not in ((1, 1), (1, n), (m, 1)):
+                raise ValueError(
+                    f"scale shape {scale.shape} != (1,1)/(1,{n})/({m},1)"
+                )
         if epi.bias:
             if bias is None:
                 raise ValueError("epilogue.bias set but no bias array")

@@ -5,11 +5,12 @@ These handle padding to tile boundaries, dataflow selection (via the
 (Pallas on TPU, interpret-mode Pallas or the jnp oracle elsewhere), and
 quantization plumbing.
 
-``matmul_fused`` / ``int8_matmul_fused`` execute the whole layer —
-GEMM plus its epilogue (dequant scale, bias, activation, residual) — in
-one kernel dispatch: the epilogue is applied in-register before the
-single HBM output write instead of as separate XLA ops re-reading the
-raw accumulator from HBM.
+``matmul_fused`` / ``int8_matmul_fused`` and ``conv2d_fused`` /
+``int8_conv2d_fused`` execute the whole layer — GEMM/conv plus its
+epilogue (dequant scale, bias, activation, residual) — in one kernel
+dispatch: the epilogue is applied in-register before the single HBM
+output write instead of as separate XLA ops re-reading the raw
+accumulator from HBM.
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.dataflow import (
-    DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
+    ConvProblem, DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
 )
 from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
@@ -50,6 +51,40 @@ def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype) -> GemmProblem:
         m=m, k=k, n=n, in_dtype=str(jnp.dtype(in_dtype)), out_dtype=out,
         acc_dtype="int32" if integer else "float32",
     )
+
+
+def _conv_problem(n: int, ih: int, iw: int, fh: int, fw: int, stride: int,
+                  cin: int, cout: int, in_dtype, out_dtype) -> ConvProblem:
+    integer = jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer)
+    if out_dtype is None:
+        out = "int32" if integer else "float32"
+    else:
+        out = str(jnp.dtype(out_dtype))
+    return ConvProblem(
+        ih=ih, iw=iw, fh=fh, fw=fw, s=stride, cin=cin, cout=cout, n=n,
+        in_dtype=str(jnp.dtype(in_dtype)), out_dtype=out,
+    )
+
+
+def _conv_pad(x, w, stride: int, oh: int, ow: int, b_oh: int, bc: int,
+              bk: int):
+    """Lane-align channels and halo-pad the image for the window loads."""
+    n, ih, iw, cin = x.shape
+    fh, fw, _, cout = w.shape
+    bc_ = min(bc, -(-cin // 128) * 128)
+    bk_ = min(bk, -(-cout // 128) * 128)
+    b_oh_ = min(b_oh, oh)
+    oh_pad = -(-oh // b_oh_) * b_oh_
+    # halo padding so every (t, ky) window load is in bounds
+    ih_need = (oh_pad - 1) * stride + fh + (stride - 1)
+    iw_need = (ow - 1) * stride + fw + (stride - 1)
+    xp = _pad_to(x, (1, 1, 1, bc_))
+    xp = jnp.pad(
+        xp,
+        ((0, 0), (0, max(0, ih_need - ih)), (0, max(0, iw_need - iw)), (0, 0)),
+    )
+    wp = _pad_to(w, (1, 1, bc_, bk_))
+    return xp, wp, oh_pad, b_oh_, bc_, bk_
 
 
 def default_matmul_spec(m: int, k: int, n: int, in_dtype="bfloat16",
@@ -124,7 +159,15 @@ def conv2d(
     out_dtype=None,
     backend: Optional[str] = None,
 ) -> jax.Array:
-    """Direct NHWC conv (VALID padding) under a dataflow spec."""
+    """Direct NHWC conv (VALID padding) under a dataflow spec.
+
+    With ``spec=None`` the dataflow (anchor AND conv blocking ``(b_oh,
+    bc, bk)``) comes from the ``core.autotune`` cache keyed on the
+    ``ConvProblem`` — the conv candidate space is ranked once per
+    distinct (geometry, dtype, hardware, backend) and memoized.  An
+    explicitly-passed ``spec`` keeps the ``b_oh``/``bc``/``bk`` keyword
+    blocking (its ``block`` field is GEMM-shaped).
+    """
     n, ih, iw, cin = x.shape
     fh, fw, _, cout = w.shape
     oh = (ih - fh) // stride + 1
@@ -133,26 +176,145 @@ def conv2d(
     if backend == "xla":
         return ref.conv2d_ref(x, w, stride, out_dtype)
     if spec is None:
-        spec = DataflowSpec.optimized()
+        try:
+            spec = autotune.best_spec(
+                _conv_problem(n, ih, iw, fh, fw, stride, cin, cout, x.dtype,
+                              out_dtype),
+                backend=backend,
+            )
+            b_oh, bc, bk = spec.block  # conv-blocked, from the conv explorer
+        except ValueError:
+            # no candidate fits the analytic VMEM budget (e.g. a very
+            # large whole-resident image): fall back to the paper's
+            # default dataflow under the keyword blocking
+            spec = DataflowSpec.optimized()
 
-    bc_ = min(bc, -(-cin // 128) * 128)
-    bk_ = min(bk, -(-cout // 128) * 128)
-    b_oh_ = min(b_oh, oh)
-    oh_pad = -(-oh // b_oh_) * b_oh_
-    # halo padding so every (t, ky) window load is in bounds
-    ih_need = (oh_pad - 1) * stride + fh + (stride - 1)
-    iw_need = (ow - 1) * stride + fw + (stride - 1)
-    xp = _pad_to(x, (1, 1, 1, bc_))
-    xp = jnp.pad(
-        xp,
-        ((0, 0), (0, max(0, ih_need - ih)), (0, max(0, iw_need - iw)), (0, 0)),
-    )
-    wp = _pad_to(w, (1, 1, bc_, bk_))
+    xp, wp, oh_pad, b_oh_, bc_, bk_ = _conv_pad(
+        x, w, stride, oh, ow, b_oh, bc, bk)
     out = conv2d_df.conv2d_df(
         xp, wp, stride, spec, oh=oh_pad, ow=ow, b_oh=b_oh_, bc=bc_, bk=bk_,
         out_dtype=out_dtype, interpret=backend == "interpret",
     )
     return out[:, :oh, :, :cout]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "activation", "spec", "b_oh", "bc", "bk",
+                     "out_dtype", "backend"),
+)
+def conv2d_fused(
+    x: jax.Array,      # (N, H, W, Cin)
+    w: jax.Array,      # (fh, fw, Cin, Cout)
+    stride: int = 1,
+    bias: Optional[jax.Array] = None,       # (Cout,) or (1, Cout) float
+    scale: Optional[jax.Array] = None,      # scalar or (Cout,) dequant scale
+    residual: Optional[jax.Array] = None,   # (N, oh, ow, Cout)
+    activation: Optional[str] = None,       # relu | gelu | silu
+    spec: Optional[DataflowSpec] = None,
+    b_oh: int = 8,
+    bc: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Fused-epilogue conv: ``act(scale * conv(x, w) + bias) + residual``.
+
+    One kernel dispatch per layer: the epilogue runs in-register on the
+    scratch accumulator at the flush, so the raw conv result never
+    round-trips HBM.  Shapes pad automatically like ``conv2d``; epilogue
+    math is float32 and the default output dtype is float32.
+    """
+    n, ih, iw, cin = x.shape
+    fh, fw, _, cout = w.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, cout)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+        if scale.size == 1:
+            scale = scale.reshape(1, 1)
+        elif scale.size == cout:
+            scale = scale.reshape(1, cout)
+        else:
+            raise ValueError(
+                f"scale must be scalar or per-output-channel (Cout={cout}), "
+                f"got {scale.shape}"
+            )
+    if backend == "xla":
+        return ref.conv2d_fused_ref(
+            x, w, stride, bias=bias, scale=scale, residual=residual,
+            activation=activation, out_dtype=out_dtype,
+        )
+    epi = Epilogue(
+        bias=bias is not None,
+        activation=activation,
+        scale=scale is not None,
+        residual=residual is not None,
+    )
+    if spec is None:
+        try:
+            spec = autotune.best_spec(
+                _conv_problem(n, ih, iw, fh, fw, stride, cin, cout, x.dtype,
+                              out_dtype or jnp.float32),
+                backend=backend,
+            )
+            b_oh, bc, bk = spec.block
+        except ValueError:
+            spec = DataflowSpec.optimized()  # see conv2d's fallback note
+    xp, wp, oh_pad, b_oh_, bc_, bk_ = _conv_pad(
+        x, w, stride, oh, ow, b_oh, bc, bk)
+    kpad = wp.shape[3]
+    if bias is not None:
+        bias = _pad_to(bias, (1, bk_))
+    if scale is not None and scale.shape != (1, 1):
+        scale = _pad_to(scale, (1, bk_))
+    if residual is not None:
+        residual = jnp.pad(
+            residual,
+            ((0, 0), (0, oh_pad - oh), (0, 0), (0, kpad - cout)),
+        )
+    out = conv2d_df.conv2d_df(
+        xp, wp, stride, spec, oh=oh_pad, ow=ow, b_oh=b_oh_, bc=bc_, bk=bk_,
+        out_dtype=out_dtype or jnp.float32,
+        interpret=backend == "interpret",
+        epilogue=epi, scale=scale, bias=bias, residual=residual,
+    )
+    return out[:, :oh, :, :cout]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "activation", "spec", "backend")
+)
+def int8_conv2d_fused(
+    xq: jax.Array, wq: jax.Array, x_scale: jax.Array, w_scale: jax.Array,
+    stride: int = 1,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    spec: Optional[DataflowSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Quantized conv with the dequant + epilogue fused into the kernel:
+    ``act((x_scale * w_scale) * conv(xq, wq) + bias) + residual`` -> f32.
+
+    Scales must be per-tensor (scalar) or combine to per-output-channel;
+    spatially-varying activation scales need the unfused path.
+    """
+    scale = (jnp.asarray(x_scale, jnp.float32)
+             * jnp.asarray(w_scale, jnp.float32))
+    cout = wq.shape[3]
+    if scale.size not in (1, cout):
+        raise ValueError(
+            f"fused conv dequant needs scalar or per-output-channel scales, "
+            f"got combined shape {scale.shape}"
+        )
+    return conv2d_fused(
+        xq, wq, stride=stride, bias=bias, scale=scale.reshape(1, -1),
+        residual=residual, activation=activation, spec=spec, backend=backend,
+    )
 
 
 @functools.partial(
@@ -235,7 +397,7 @@ def matmul_fused(
     a: jax.Array,
     b: jax.Array,
     bias: Optional[jax.Array] = None,       # (N,) or (1, N) float
-    scale: Optional[jax.Array] = None,      # scalar or (N,) dequant scale
+    scale: Optional[jax.Array] = None,      # scalar, (N,) or (M, 1) scale
     residual: Optional[jax.Array] = None,   # (M, N)
     activation: Optional[str] = None,       # relu | gelu | silu
     spec: Optional[DataflowSpec] = None,
@@ -248,6 +410,11 @@ def matmul_fused(
     accumulator, so the raw GEMM result never round-trips HBM.  Shapes
     pad automatically like ``matmul``; epilogue math is float32 and the
     default output dtype is float32.
+
+    ``scale`` may be per-tensor (scalar), per-column ((N,) / (1, N)) or
+    per-row ((M, 1) — e.g. int8 per-activation-row dequant).  When
+    M == N an explicit 2-D shape disambiguates; a 1-D vector defaults to
+    per-column.
     """
     m, k = a.shape
     n = b.shape[1]
@@ -258,12 +425,18 @@ def matmul_fused(
         scale = jnp.asarray(scale, jnp.float32)
         if scale.size == 1:
             scale = scale.reshape(1, 1)
-        elif scale.size == n:
+        elif scale.ndim == 2 and scale.shape == (m, 1):
+            pass  # per-row, explicitly shaped
+        elif scale.size == n and not (scale.ndim == 2
+                                      and scale.shape[1] == 1):
             scale = scale.reshape(1, n)
+        elif scale.size == m and (scale.ndim == 1
+                                  or scale.shape[1] == 1):
+            scale = scale.reshape(m, 1)
         else:
             raise ValueError(
-                f"scale must be scalar or per-column (N={n}), got "
-                f"{scale.shape}"
+                f"scale must be scalar, per-column (N={n}) or per-row "
+                f"(M={m}, 1), got {scale.shape}"
             )
     if backend == "xla":
         return ref.matmul_fused_ref(
@@ -289,6 +462,8 @@ def matmul_fused(
         bias = _pad_to(bias, (1, bn))
     if scale is not None and scale.shape[1] != 1:
         scale = _pad_to(scale, (1, bn))
+    elif scale is not None and scale.shape[0] != 1:
+        scale = _pad_to(scale, (bm, 1))  # per-row rides the M padding
     if residual is not None:
         residual = _pad_to(residual, (bm, bn))
     spec = spec.with_block((min(bm, mp), min(bk, ap.shape[1]),
@@ -313,24 +488,29 @@ def int8_matmul_fused(
     """Quantized GEMM with the dequant + epilogue fused into the kernel:
     ``act((a_scale * b_scale) * (aq @ bq) + bias) + residual`` -> f32.
 
-    Scales must be per-tensor (scalar) or combine to per-output-column;
-    per-row activation scales need the unfused ``int8_matmul``.
+    Scales must be per-tensor (scalar), combine to per-output-column
+    (1, N), or combine to per-activation-row (M, 1); a full (M, N) scale
+    grid (per-row activations x per-column weights) needs the unfused
+    ``int8_matmul``.
     """
     scale = (jnp.asarray(a_scale, jnp.float32)
              * jnp.asarray(b_scale, jnp.float32))
-    n = bq.shape[1]
-    # shape-based check: a per-row (M, 1) scale must not be mistaken for a
-    # per-column vector even when M == N
+    m, n = aq.shape[0], bq.shape[1]
+    # shape-based dispatch: a per-row (M, 1) scale must not be mistaken
+    # for a per-column vector even when M == N
     per_tensor = scale.size == 1
     per_column = (scale.shape == (n,)
                   or (scale.ndim == 2 and scale.shape[0] == 1
                       and scale.shape[1] == n))
-    if not (per_tensor or per_column):
+    per_row = scale.ndim == 2 and scale.shape == (m, 1)
+    if not (per_tensor or per_column or per_row):
         raise ValueError(
-            f"fused dequant needs scalar or per-column scales, got "
-            f"combined shape {scale.shape}; use int8_matmul instead"
+            f"fused dequant needs scalar, per-column or per-row scales, "
+            f"got combined shape {scale.shape}; use int8_matmul instead"
         )
     return matmul_fused(
-        aq, bq, bias=bias, scale=scale.reshape(1, -1), residual=residual,
+        aq, bq, bias=bias,
+        scale=scale if per_row else scale.reshape(1, -1),
+        residual=residual,
         activation=activation, spec=spec, backend=backend,
     )

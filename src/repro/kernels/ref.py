@@ -52,6 +52,33 @@ def conv2d_ref(
     return out.astype(out_dtype or acc)
 
 
+def conv2d_fused_ref(
+    x: jax.Array,          # (N, H, W, Cin)
+    w: jax.Array,          # (fh, fw, Cin, Cout)
+    stride: int = 1,
+    bias: Optional[jax.Array] = None,       # (1, Cout)
+    scale: Optional[jax.Array] = None,      # (1, 1) or (1, Cout)
+    residual: Optional[jax.Array] = None,   # (N, oh, ow, Cout)
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused-epilogue conv oracle: act(scale * conv + bias) + residual.
+
+    Epilogue arithmetic runs in float32 (matching the in-kernel fusion);
+    ``bias``/``scale``/``residual`` may be any broadcastable shape.
+    """
+    out = conv2d_ref(x, w, stride).astype(jnp.float32)
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation is not None:
+        out = ACTIVATION_FNS[activation](out)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    return out.astype(out_dtype or jnp.float32)
+
+
 def grouped_conv2d_ref(
     x: jax.Array,          # (N, H, W, Cin)
     w: jax.Array,          # (fh, fw, Cin//groups, Cout)

@@ -118,6 +118,41 @@ def hot_gemm_problems(cfg, batch: int, seq: int):
     return [GemmProblem(m, k, n, in_dtype=dt) for m, k, n in sorted(shapes)]
 
 
+# whisper-style audio frontends: n_mels mel bins, two k=3 1-D convs
+# (stride 1 then stride 2) over 2x the encoder frame count
+AUDIO_N_MELS = 80
+AUDIO_CONV_KERNEL = 3
+
+
+def hot_conv_problems(cfg, batch: int, seq: int):
+    """The conv workloads of ``cfg``'s modality frontend, as
+    ``ConvProblem`` rows for the ``core.autotune`` conv spec cache.
+
+    Audio (whisper-family) configs front the encoder with two 1-D convs
+    over the mel spectrogram — k=3 stride-1 (n_mels -> d_model) then k=3
+    stride-2 (d_model -> d_model) halving the frame count to the encoder
+    sequence length.  Represented as height-1 2-D ``ConvProblem``s (the
+    form ``ops.conv2d`` keys on).  Other families have no conv frontend
+    and return an empty list.
+    """
+    from repro.core.dataflow import ConvProblem
+
+    if cfg.family != "audio":
+        return []
+    dt = str(jnp.dtype(cfg.param_dtype))
+    enc_seq = max(1, int(seq * cfg.enc_seq_ratio))
+    frames = 2 * enc_seq
+    k = AUDIO_CONV_KERNEL
+    return [
+        ConvProblem(ih=1, iw=frames + k - 1, fh=1, fw=k, s=1,
+                    cin=AUDIO_N_MELS, cout=cfg.d_model, n=batch,
+                    in_dtype=dt, out_dtype="float32"),
+        ConvProblem(ih=1, iw=2 * enc_seq + k - 1, fh=1, fw=k, s=2,
+                    cin=cfg.d_model, cout=cfg.d_model, n=batch,
+                    in_dtype=dt, out_dtype="float32"),
+    ]
+
+
 def layer_windows(cfg) -> Optional[jax.Array]:
     """Per-layer sliding windows as a scannable array (hybrid archs)."""
     if cfg.attn_window is None:

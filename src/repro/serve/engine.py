@@ -69,8 +69,13 @@ class Engine:
     def _warm_autotune(self, batch: int, seq: int) -> None:
         """Populate the dataflow-spec cache for this request shape so the
         prefill and decode traces hit memoized specs instead of
-        enumerating the explorer's candidate space.  Only runs when the
-        model will actually take the Pallas kernel path."""
+        enumerating the explorer's candidate space.  Covers the hot GEMM
+        shapes and, for configs with a conv frontend (audio family), the
+        frontend's ``ConvProblem`` shapes — today the whisper frontend is
+        stubbed (precomputed frame embeddings), so the conv warm-up is
+        cheap forward-keying for when the real frontend lands on
+        ``ops.conv2d_fused``.  Only runs when the model will actually
+        take the Pallas kernel path."""
         if not (getattr(self.cfg, "use_pallas_kernels", False)
                 and jax.default_backend() == "tpu"):
             return
@@ -79,7 +84,8 @@ class Engine:
             return
         self._warmed.add(key)
         autotune.warm(lm.hot_gemm_problems(self.cfg, batch, seq)
-                      + lm.hot_gemm_problems(self.cfg, batch, 1))
+                      + lm.hot_gemm_problems(self.cfg, batch, 1)
+                      + lm.hot_conv_problems(self.cfg, batch, seq))
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  greedy: bool = True, seed: int = 0) -> np.ndarray:

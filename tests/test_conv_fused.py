@@ -1,0 +1,257 @@
+"""Fused-epilogue conv kernels, single-dispatch WS/IS conv, and the conv
+autotune keying path.
+
+Oracle for every comparison is ``ref.conv2d_fused_ref`` /
+``ref.conv2d_ref`` (jnp direct conv + epilogue), run in interpret mode.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autotune, cost_model, explorer
+from repro.core.dataflow import ConvProblem, DataflowSpec, GemmProblem, IS, OS, WS
+from repro.core.jaxpr_utils import count_pallas_calls, count_primitive
+from repro.kernels import ops, ref
+from repro.kernels.conv2d_df import conv2d_df
+
+ANCHORS = {"os": OS, "ws": WS, "is": IS}
+CONV_CASES = [
+    # (n, ih, iw, fh, fw, s, cin, cout)
+    (2, 14, 14, 3, 3, 1, 128, 128),
+    (1, 15, 13, 3, 3, 2, 64, 96),     # stride 2 + odd channels (padding)
+    (1, 12, 12, 5, 5, 1, 60, 70),     # odd channels both sides
+]
+EPILOGUES = {
+    "scale_bias_gelu_res": dict(scale=True, bias=True, activation="gelu",
+                                residual=True),
+    "bias_relu": dict(bias=True, activation="relu"),
+    "silu": dict(activation="silu"),
+    "scale": dict(scale=True),
+}
+
+
+def _operands(case, seed, in_dtype=jnp.float32):
+    n, ih, iw, fh, fw, s, cin, cout = case
+    oh = (ih - fh) // s + 1
+    ow = (iw - fw) // s + 1
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(in_dtype, jnp.integer):
+        x = jnp.asarray(rng.integers(-20, 21, (n, ih, iw, cin)), in_dtype)
+        w = jnp.asarray(rng.integers(-20, 21, (fh, fw, cin, cout)), in_dtype)
+    else:
+        x = jnp.asarray(rng.normal(size=(n, ih, iw, cin)), in_dtype)
+        w = jnp.asarray(rng.normal(size=(fh, fw, cin, cout)), in_dtype)
+    bias = jnp.asarray(rng.normal(size=(cout,)), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.01, 0.5, (cout,)), jnp.float32)
+    residual = jnp.asarray(rng.normal(size=(n, oh, ow, cout)), jnp.float32)
+    return x, w, bias, scale, residual
+
+
+@pytest.mark.parametrize("epi_name", sorted(EPILOGUES))
+@pytest.mark.parametrize("case", CONV_CASES)
+@pytest.mark.parametrize("anchor", sorted(ANCHORS))
+def test_conv2d_fused_matches_oracle(anchor, case, epi_name):
+    s = case[5]
+    x, w, bias, scale, residual = _operands(
+        case, hash((anchor, case, epi_name)) % 2**31)
+    flags = EPILOGUES[epi_name]
+    kw = dict(
+        bias=bias if flags.get("bias") else None,
+        scale=scale if flags.get("scale") else None,
+        residual=residual if flags.get("residual") else None,
+        activation=flags.get("activation"),
+    )
+    got = ops.conv2d_fused(
+        x, w, stride=s, spec=DataflowSpec.basic(ANCHORS[anchor]),
+        b_oh=4, backend="interpret", **kw,
+    )
+    want = ref.conv2d_fused_ref(
+        x, w, s,
+        bias=kw["bias"].reshape(1, -1) if kw["bias"] is not None else None,
+        scale=kw["scale"].reshape(1, -1) if kw["scale"] is not None else None,
+        residual=kw["residual"], activation=kw["activation"],
+    )
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("anchor", sorted(ANCHORS))
+def test_int8_conv2d_fused(anchor):
+    case = (1, 14, 14, 3, 3, 1, 128, 128)
+    x, w, bias, _, residual = _operands(case, 7, jnp.int8)
+    x_scale, w_scale = jnp.float32(0.02), jnp.float32(0.01)
+    got = ops.int8_conv2d_fused(
+        x, w, x_scale, w_scale, bias=bias, residual=residual,
+        activation="silu", spec=DataflowSpec.basic(ANCHORS[anchor]),
+        backend="interpret",
+    )
+    want = ref.conv2d_fused_ref(
+        x, w, 1, scale=(x_scale * w_scale).reshape(1, 1),
+        bias=bias.reshape(1, -1), residual=residual, activation="silu",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_conv2d_fused_per_channel_scale():
+    case = (1, 12, 12, 3, 3, 1, 64, 96)
+    x, w, _, w_scale, _ = _operands(case, 9, jnp.int8)
+    got = ops.int8_conv2d_fused(
+        x, w, jnp.float32(0.05), w_scale, activation="relu",
+        spec=DataflowSpec.basic(OS), backend="interpret",
+    )
+    want = ref.conv2d_fused_ref(
+        x, w, 1, scale=(0.05 * w_scale).reshape(1, -1), activation="relu",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_bf16_conv_fused():
+    case = (1, 12, 12, 3, 3, 1, 128, 128)
+    x, w, bias, _, _ = _operands(case, 11, jnp.bfloat16)
+    got = ops.conv2d_fused(x, w, bias=bias, activation="gelu",
+                           spec=DataflowSpec.basic(WS), b_oh=4,
+                           backend="interpret")
+    want = ref.conv2d_fused_ref(x, w, 1, bias=bias.reshape(1, -1),
+                                activation="gelu")
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-1)
+
+
+# ---------------------------------------------------------------------------
+# Single-dispatch WS/IS conv regression.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("anchor", sorted(ANCHORS))
+def test_conv_single_dispatch_no_zeros_init(anchor):
+    """Every conv anchor must lower as exactly ONE pallas_call with no
+    output zeros-init round trip, regardless of the reduction depth
+    (here n_r = fh*fw*gc = 9)."""
+    x = jnp.zeros((1, 14, 14, 128), jnp.float32)   # pre-padded: oh=ow=12
+    w = jnp.zeros((3, 3, 128, 128), jnp.float32)
+    spec = DataflowSpec.basic(ANCHORS[anchor])
+    jx = jax.make_jaxpr(
+        lambda a, b: conv2d_df(a, b, 1, spec, oh=12, ow=12, b_oh=4,
+                               interpret=True))(x, w)
+    assert count_pallas_calls(jx.jaxpr) == 1, jx
+    # the old WS/IS lowering materialized jnp.zeros((n, oh, ow, k)) at
+    # the top level; the in-kernel scratch init lives inside the
+    # pallas_call, not the outer jaxpr
+    assert all(eqn.primitive.name != "broadcast_in_dim"
+               for eqn in jx.jaxpr.eqns), jx
+
+
+def test_ws_is_conv_matches_os_bitwise_int32():
+    """Single-dispatch WS/IS conv accumulates in an int32 scratch like
+    OS: int8 convs must agree bitwise across all anchors and with the
+    oracle."""
+    case = (2, 15, 13, 3, 3, 2, 64, 96)
+    x, w, _, _, _ = _operands(case, 13, jnp.int8)
+    outs = {
+        name: ops.conv2d(x, w, stride=2, spec=DataflowSpec.basic(a),
+                         backend="interpret", b_oh=4)
+        for name, a in ANCHORS.items()
+    }
+    want = ref.conv2d_ref(x, w, 2)
+    for name, got in outs.items():
+        assert got.dtype == jnp.int32, name
+        assert bool(jnp.all(got == want)), name
+
+
+# ---------------------------------------------------------------------------
+# Conv autotune keying.
+# ---------------------------------------------------------------------------
+CONV_PROBLEM = ConvProblem(ih=14, iw=14, fh=3, fw=3, s=1, cin=128, cout=128,
+                           n=2, in_dtype="float32", out_dtype="float32")
+
+
+def test_conv_autotune_cache_hits():
+    autotune.clear(disk=True)
+    autotune.reset_stats()
+    s1 = autotune.best_spec(CONV_PROBLEM, backend="interpret")
+    s2 = autotune.best_spec(CONV_PROBLEM, backend="interpret")
+    st = autotune.stats()
+    assert s1 == s2
+    assert st["enumerations"] == 1 and st["hits"] == 1, st
+
+
+def test_ops_conv2d_resolves_through_conv_autotune():
+    """ops.conv2d(spec=None) must key the cache on the ConvProblem: the
+    trace-time lookup after a direct best_spec call is a cache hit."""
+    autotune.clear(disk=True)
+    autotune.reset_stats()
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 14, 14, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 128, 128)), jnp.float32)
+    spec = autotune.best_spec(CONV_PROBLEM, backend="interpret")
+    assert autotune.stats()["misses"] == 1, autotune.stats()
+    out = ops.conv2d(x, w, stride=1, backend="interpret")
+    st = autotune.stats()
+    assert st["hits"] >= 1 and st["enumerations"] == 1, st
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.conv2d_ref(x, w, 1)),
+                               rtol=1e-4, atol=1e-2)
+    # the chosen spec is conv-blocked and feasible for the realized kernel
+    b_oh, bc, bk = spec.block
+    assert b_oh in (1, 4, 8, 16) and bc % 128 == 0 and bk % 128 == 0
+    assert cost_model.conv_vmem_footprint(CONV_PROBLEM, spec) \
+        <= spec.vmem_budget
+
+
+def test_conv_key_distinct_from_gemm_and_geometry():
+    g = CONV_PROBLEM.as_gemm()
+    gp = GemmProblem(m=g.m, k=g.k, n=g.n, in_dtype=g.in_dtype,
+                     out_dtype=g.out_dtype)
+    k_conv = autotune._key(CONV_PROBLEM, cost_model.V5E, "interpret")
+    k_gemm = autotune._key(gp, cost_model.V5E, "interpret")
+    assert k_conv != k_gemm
+    # same implicit-GEMM view, different stride -> different key
+    import dataclasses
+    other = dataclasses.replace(CONV_PROBLEM, s=2)
+    assert autotune._key(other, cost_model.V5E, "interpret") != k_conv
+
+
+def test_conv2d_spec_fallback_when_image_exceeds_vmem():
+    """A conv whose whole-resident image busts the analytic VMEM budget
+    has no feasible conv candidate; ops.conv2d must fall back to the
+    default dataflow + keyword blocking instead of raising (the seed
+    behaviour for such shapes)."""
+    big = ConvProblem(ih=224, iw=224, fh=3, fw=3, s=1, cin=128, cout=128,
+                      in_dtype="float32", out_dtype="float32")
+    assert explorer.enumerate_conv_candidates(big) == []
+    x = jax.ShapeDtypeStruct((1, 224, 224, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 3, 128, 128), jnp.float32)
+    out = jax.eval_shape(
+        lambda a, b: ops.conv2d(a, b, stride=1, backend="interpret"), x, w)
+    assert out.shape == (1, 222, 222, 128)
+
+
+def test_conv_explorer_prefers_os():
+    """Paper headline: OS-anchored conv dataflows win the ranking."""
+    ranked = explorer.explore_conv(CONV_PROBLEM, top=3)
+    assert ranked and ranked[0].spec.anchor == OS
+    assert all(c.feasible for c in ranked)
+
+
+def test_hot_conv_problems_and_mixed_warm():
+    from repro.configs.whisper_tiny import SMOKE
+    from repro.models import lm
+
+    probs = lm.hot_conv_problems(SMOKE, batch=2, seq=64)
+    assert len(probs) == 2
+    assert probs[0].cin == lm.AUDIO_N_MELS
+    assert probs[1].s == 2 and probs[1].cout == SMOKE.d_model
+    # dense configs have no conv frontend
+    from repro.configs.qwen3_1_7b import CONFIG as QWEN
+    assert lm.hot_conv_problems(QWEN, 2, 64) == []
+    # gemm + conv problems warm through one call
+    autotune.clear(disk=True)
+    autotune.reset_stats()
+    gemms = lm.hot_gemm_problems(SMOKE, 2, 64)
+    specs = autotune.warm(gemms + probs, backend="interpret")
+    assert len(specs) == len(gemms) + 2
+    st = autotune.stats()
+    assert st["misses"] == len(specs), st

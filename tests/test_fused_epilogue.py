@@ -127,13 +127,62 @@ def test_fused_pads_ragged_shapes(spec_name, shape):
                                rtol=1e-5, atol=1e-3)
 
 
-def test_int8_fused_rejects_per_row_scale_even_when_square():
-    # m == n: a (M, 1) per-row scale must not slip through as per-column
+@pytest.mark.parametrize("spec_name",
+                         ["os_basic", "os_w_stripe", "ws_basic",
+                          "ws_o_stripe", "is_basic", "is_o_stripe"])
+def test_fused_per_row_scale(spec_name):
+    """Per-row (M, 1) dequant scales through every anchor family."""
+    m, k, n = 256, 384, 512
+    a, b, bias, _, _ = _operands(m, k, n, hash(spec_name) % 2 ** 31)
+    rng = np.random.default_rng(21)
+    scale = jnp.asarray(rng.uniform(0.01, 0.5, (m, 1)), jnp.float32)
+    out = ops.matmul_fused(a, b, bias=bias, scale=scale, activation="relu",
+                           spec=SPECS[spec_name], backend="interpret")
+    want = ref.matmul_fused_ref(a, b, bias=bias, scale=scale,
+                                activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_int8_fused_per_row_scale_even_when_square():
+    # m == n: a (M, 1) per-row scale must dispatch as per-row, not
+    # per-column — the fused result must match the unfused oracle
+    m = kdim = n = 128
+    rng = np.random.default_rng(31)
+    aq = jnp.asarray(rng.integers(-127, 128, (m, kdim)), jnp.int8)
+    bq = jnp.asarray(rng.integers(-127, 128, (kdim, n)), jnp.int8)
+    a_scale = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    b_scale = jnp.float32(0.013)
+    out = ops.int8_matmul_fused(aq, bq, a_scale, b_scale,
+                                backend="interpret")
+    want = ref.int8_matmul_ref(aq, bq, a_scale, b_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_fused_per_row_scale_padded():
+    m, kdim, n = 100, 130, 70   # ragged: every dim pads
+    rng = np.random.default_rng(33)
+    aq = jnp.asarray(rng.integers(-127, 128, (m, kdim)), jnp.int8)
+    bq = jnp.asarray(rng.integers(-127, 128, (kdim, n)), jnp.int8)
+    a_scale = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    b_scale = jnp.float32(0.02)
+    out = ops.int8_matmul_fused(aq, bq, a_scale, b_scale, activation="silu",
+                                backend="interpret")
+    want = ref.matmul_fused_ref(aq, bq, scale=a_scale * b_scale,
+                                activation="silu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_fused_rejects_full_scale_grid():
+    # per-row activations x per-column weights combine to (M, N): only
+    # the unfused path can apply that
     aq = jnp.zeros((128, 128), jnp.int8)
     bq = jnp.zeros((128, 128), jnp.int8)
-    with pytest.raises(ValueError, match="per-column"):
-        ops.int8_matmul_fused(aq, bq, jnp.ones((128, 1)), jnp.ones(()),
-                              backend="interpret")
+    with pytest.raises(ValueError, match="per-row"):
+        ops.int8_matmul_fused(aq, bq, jnp.ones((128, 1)),
+                              jnp.ones((1, 128)), backend="interpret")
 
 
 def test_fused_per_column_scale():

@@ -63,6 +63,21 @@ def test_attention_dataflows(case, anchor):
                                rtol=1e-3, atol=2e-3)
 
 
+def test_kv_stationary_single_dispatch():
+    """WS attention must issue exactly ONE pallas_call regardless of the
+    number of KV blocks (previously one aliased call per KV block)."""
+    import jax
+    from repro.core.jaxpr_utils import count_pallas_calls
+
+    for skv in (256, 512):   # 2 and 4 KV blocks
+        q = jnp.zeros((2, 4, 256, 64), jnp.float32)
+        k = jnp.zeros((2, 2, skv, 64), jnp.float32)
+        jx = jax.make_jaxpr(
+            lambda q, k, v: ops.attention(q, k, v, backend="interpret",
+                                          anchor="ws"))(q, k, k)
+        assert count_pallas_calls(jx.jaxpr) == 1, (skv, jx)
+
+
 def test_binary_matmul_exact():
     rng = np.random.default_rng(1)
     a = jnp.asarray(rng.choice([-1.0, 1.0], (200, 256)), jnp.float32)
