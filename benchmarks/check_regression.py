@@ -1,0 +1,158 @@
+"""CI benchmark regression gate.
+
+Compares fresh interpret-mode benchmark runs against the committed
+``BENCH_*.json`` baselines at the repo root and fails (exit 1) when a
+tracked counter regresses:
+
+  *pallas_calls*   kernel dispatches per trace — must not exceed the
+                   baseline at all (a second dispatch means a fusion or
+                   single-dispatch lowering broke);
+  *eqns*           total jaxpr equations — a trace-bloat proxy, allowed
+                   ``--tolerance`` relative slack (jax version drift
+                   moves it a little);
+  *traffic_bytes*  analytic HBM byte counts from the cost model —
+                   deterministic, allowed the same slack for cost-model
+                   refinements.
+
+Wall-clock fields (``*_us``) and ``meta`` blocks are ignored: interpret
+mode is a CPU proxy and CI machines are noisy; the tracked claims are
+the backend-independent counters.
+
+Fresh numbers come from ``--fresh-dir`` (a directory of BENCH_*.json
+produced by ``benchmarks/run.py --out-dir``, the CI flow — the committed
+baselines are never overwritten) or, when omitted, from re-running the
+JSON-writing suites into a temp directory.
+
+Exit codes: 0 = no regressions, 1 = regression or missing data.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, List, Tuple
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# baseline file -> suite callable (rerun mode); each accepts out_path
+def _suites():
+    from benchmarks import bench_binary, bench_conv, bench_fused
+
+    return {
+        "BENCH_fused.json": bench_fused.run,
+        "BENCH_conv.json": bench_conv.run,
+        "BENCH_binary.json": bench_binary.run_smoke,
+    }
+
+
+def _walk(prefix: str, node) -> Dict[str, float]:
+    """Flatten numeric leaves to {dotted.path: value}, skipping meta."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for key, val in node.items():
+            if key == "meta":
+                continue
+            out.update(_walk(f"{prefix}.{key}" if prefix else key, val))
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            # index rows by their "name" field when present so a
+            # reordering doesn't read as a regression
+            tag = val.get("name", str(i)) if isinstance(val, dict) else str(i)
+            out.update(_walk(f"{prefix}[{tag}]", val))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+    return out
+
+
+def _rule(path: str) -> Tuple[str, bool]:
+    """(kind, tracked) for a flattened counter path."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf.endswith("_us") or leaf == "us":
+        return ("wallclock", False)
+    if "pallas_calls" in leaf:
+        return ("dispatch", True)
+    if "eqns" in leaf:
+        return ("eqns", True)
+    if "traffic_bytes" in leaf:
+        return ("traffic", True)
+    return ("other", False)
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            label: str) -> List[str]:
+    """Regression messages (empty = clean) for one BENCH file pair."""
+    base_flat = _walk("", baseline)
+    fresh_flat = _walk("", fresh)
+    problems: List[str] = []
+    for path, base_val in sorted(base_flat.items()):
+        kind, tracked = _rule(path)
+        if not tracked:
+            continue
+        if path not in fresh_flat:
+            problems.append(f"{label}:{path}: missing from fresh run")
+            continue
+        new = fresh_flat[path]
+        limit = base_val if kind == "dispatch" \
+            else base_val * (1.0 + tolerance)
+        if new > limit:
+            problems.append(
+                f"{label}:{path}: {new:g} > baseline {base_val:g}"
+                + ("" if kind == "dispatch" else f" (+{tolerance:.0%} tol)")
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--fresh-dir", default=None,
+        help="directory of freshly-generated BENCH_*.json (from "
+             "benchmarks/run.py --out-dir); omitted = rerun suites here",
+    )
+    ap.add_argument(
+        "--tolerance", type=float, default=0.25,
+        help="relative slack for eqn/traffic counters (default 0.25); "
+             "dispatch counts get none",
+    )
+    args = ap.parse_args(argv)
+
+    fresh_dir = args.fresh_dir
+    if fresh_dir is None:
+        fresh_dir = tempfile.mkdtemp(prefix="bench-fresh-")
+        print(f"# re-running JSON suites into {fresh_dir}")
+        for fname, fn in _suites().items():
+            fn(out_path=os.path.join(fresh_dir, fname))
+
+    problems: List[str] = []
+    checked = 0
+    for fname in sorted(_suites()):
+        base_path = os.path.join(REPO_ROOT, fname)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(base_path):
+            problems.append(f"{fname}: committed baseline missing")
+            continue
+        if not os.path.exists(fresh_path):
+            problems.append(f"{fname}: fresh run missing (suite failed?)")
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        msgs = compare(baseline, fresh, args.tolerance, fname)
+        problems.extend(msgs)
+        checked += 1
+        print(f"# {fname}: "
+              + ("OK" if not msgs else f"{len(msgs)} regression(s)"))
+    if problems:
+        print("\nBENCHMARK REGRESSIONS:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"# regression gate clean ({checked} baseline file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,10 @@ class ArchConfig:
 
     # --- paper technique -----------------------------------------------------
     use_pallas_kernels: bool = False       # True on real TPU runtime
+    # decoder-layer MLPs use the binary (xnor-popcount) datapath — +-1
+    # packed weights + folded-BN fused epilogue (paper Fig. 9 workload
+    # class, layers.binary_mlp_apply); requires d_model/d_ff % 32 == 0
+    binary_mlp: bool = False
 
     def __post_init__(self):
         if self.n_heads and self.n_kv_heads and self.n_heads % self.n_kv_heads:

@@ -20,6 +20,16 @@ different filter/stride have different window reuse and VMEM needs) —
 and resolve through ``explorer.explore_conv`` (conv-blocked specs whose
 ``block`` is ``(b_oh, bc, bk)``; see ``cost_model.conv_gemm_view``).
 
+Binary problems (``BinaryProblem``) key on the packed geometry plus the
+true reduction depth (two packings of different-K layers can share a
+``kp`` but differ in bit-ops) —
+
+    v<CACHE_VERSION>|bin|m|kp|n|n_bits|out_dtype
+                    |hw=<name>|vmem=<bytes>|backend=<...>
+
+and resolve through ``explorer.explore_binary`` (``block`` =
+``(bm, bkp, bn)`` with the reduction blocked in packed uint32 words).
+
 Disk location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.  Invalidation: entries embed the key
 schema version, so bumping ``CACHE_VERSION`` (e.g. when the cost model
@@ -29,13 +39,19 @@ read-only filesystem degrades to the in-process cache.
 
 ``CACHE_VERSION`` history: 1 = GEMM-only keys (PR 1); 2 = conv keys
 added alongside the single-dispatch conv lowering (PR 2) — the conv
-kernel change shifts realized traffic, so v1 entries are orphaned.
+kernel change shifts realized traffic, so v1 entries are orphaned;
+3 = binary keys added alongside the explored binary anchors (PR 3) —
+the binary kernel's blocking became spec-driven, so v2 entries are
+orphaned.
 
 An optional *empirical refinement* pass (``refine=True``) re-ranks the
 analytical top-k by interpret-mode wall clock (``explorer.empirical_rank``)
 before caching, trading one-off tuning time for a measured winner — the
 PolyDL observation that autotuned selection over a pruned space beats a
-purely analytical pick.
+purely analytical pick.  With ``refine=None`` (the default) the pass is
+enabled by setting ``REPRO_AUTOTUNE_REFINE=1`` in the environment; it
+changes only which feasible spec is picked, never the numerics of the
+op that consumes it.
 """
 from __future__ import annotations
 
@@ -46,6 +62,7 @@ from typing import Dict, Iterable, List, Optional, Union
 
 from repro.core import cost_model, explorer
 from repro.core.dataflow import (
+    BinaryProblem,
     ConvProblem,
     DataflowSpec,
     GemmProblem,
@@ -53,9 +70,9 @@ from repro.core.dataflow import (
     Stationarity,
 )
 
-CACHE_VERSION = 2
+CACHE_VERSION = 3
 
-Problem = Union[GemmProblem, ConvProblem]
+Problem = Union[GemmProblem, ConvProblem, BinaryProblem]
 
 _memory: Dict[str, DataflowSpec] = {}
 _disk_loaded = False
@@ -76,6 +93,11 @@ def _key(problem: Problem, hw: cost_model.HardwareSpec,
             str(problem.fh), str(problem.fw), str(problem.s),
             str(problem.cin), str(problem.cout),
             problem.in_dtype, problem.out_dtype,
+        ]
+    elif isinstance(problem, BinaryProblem):
+        head = [
+            "bin", str(problem.m), str(problem.kp), str(problem.n),
+            str(problem.n_bits), problem.out_dtype,
         ]
     else:
         head = [
@@ -160,20 +182,31 @@ def _save_disk() -> None:
         pass
 
 
+def refine_enabled() -> bool:
+    """The ``REPRO_AUTOTUNE_REFINE=1`` env flag (ROADMAP PR-1 open item):
+    opt-in empirical re-ranking of the analytical top-k on cache misses."""
+    return os.environ.get("REPRO_AUTOTUNE_REFINE", "") == "1"
+
+
 def best_spec(
     problem: Problem,
     hw: cost_model.HardwareSpec = cost_model.V5E,
     backend: str = "pallas",
-    refine: bool = False,
+    refine: Optional[bool] = None,
     refine_top: int = 3,
 ) -> DataflowSpec:
     """Cached explorer pick for ``problem`` on ``hw``/``backend``.
 
     ``GemmProblem``s rank via ``explorer.explore``; ``ConvProblem``s via
     ``explorer.explore_conv`` and return *conv-blocked* specs (``block``
-    = ``(b_oh, bc, bk)``).  Empirical refinement applies to GEMM
-    problems only (the interpret-mode re-rank runs ``ops.matmul``).
+    = ``(b_oh, bc, bk)``); ``BinaryProblem``s via
+    ``explorer.explore_binary`` (``block`` = ``(bm, bkp, bn)`` in packed
+    words).  Empirical refinement applies to GEMM problems only (the
+    interpret-mode re-rank runs ``ops.matmul``); ``refine=None`` defers
+    to the ``REPRO_AUTOTUNE_REFINE=1`` env flag (default off).
     """
+    if refine is None:
+        refine = refine_enabled()
     _load_disk()
     key = _key(problem, hw, backend)
     _stats["lookups"] += 1
@@ -184,12 +217,15 @@ def best_spec(
     _stats["misses"] += 1
     _stats["enumerations"] += 1
     is_conv = isinstance(problem, ConvProblem)
-    ranked = (explorer.explore_conv if is_conv else explorer.explore)(
-        problem, hw, top=max(1, refine_top))
+    is_binary = isinstance(problem, BinaryProblem)
+    explore_fn = (explorer.explore_conv if is_conv
+                  else explorer.explore_binary if is_binary
+                  else explorer.explore)
+    ranked = explore_fn(problem, hw, top=max(1, refine_top))
     if not ranked:
         raise ValueError(f"no feasible dataflow for {problem}")
     spec = ranked[0].spec
-    if refine and not is_conv and len(ranked) > 1:
+    if refine and not (is_conv or is_binary) and len(ranked) > 1:
         measured = explorer.empirical_rank(
             problem, [c.spec for c in ranked], interpret=True
         )
@@ -205,8 +241,8 @@ def warm(
     hw: cost_model.HardwareSpec = cost_model.V5E,
     backend: str = "pallas",
 ) -> List[DataflowSpec]:
-    """Pre-populate the cache for a known set of hot workloads (GEMM and
-    conv problems mix freely).
+    """Pre-populate the cache for a known set of hot workloads (GEMM,
+    conv and binary problems mix freely).
 
     Misses are batched into a single disk write at the end instead of
     one full-store rewrite per problem.  Problems with no feasible

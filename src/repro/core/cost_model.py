@@ -20,6 +20,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.dataflow import (
     ANCHOR_GRID_ORDER,
+    BinaryProblem,
     ConvProblem,
     DataflowSpec,
     GemmProblem,
@@ -354,6 +355,35 @@ def conv_vmem_footprint(p: ConvProblem, spec: DataflowSpec) -> int:
     foot += 2 * b_oh * p.ow * min(bk, kpad) * ob
     foot += b_oh * p.ow * min(bk, kpad) * ab
     return foot
+
+
+def binary_traffic(p: BinaryProblem, spec: DataflowSpec) -> Traffic:
+    """HBM bytes moved by the binary kernel realizing ``spec`` on ``p``.
+
+    Bit-traffic accounting runs on the packed-word GEMM view
+    (``BinaryProblem.as_gemm``): operands are uint32 words carrying 32
+    binary channels each, so A is ``m * kp * 4`` bytes — 8x smaller than
+    the int8 image of the same layer, which is the data-movement
+    component of the paper's Fig. 9 speedup.  ``spec.block`` is
+    ``(bm, bkp, bn)`` with the reduction blocked in packed words.
+    """
+    return gemm_traffic(p.as_gemm(), spec)
+
+
+def binary_time_estimate(
+    p: BinaryProblem, spec: DataflowSpec, hw: HardwareSpec = V5E
+) -> float:
+    """max(compute, memory) estimate for ranking binary dataflows.
+
+    Compute charges ``bit_ops`` (xnor + popcount-accumulate pairs over
+    the *true* reduction depth) at the VPU's ``binary_packed`` rate;
+    memory comes from ``binary_traffic`` on the packed view.
+    """
+    t = binary_traffic(p, spec)
+    tc = p.bit_ops / hw.peak_flops_for("binary_packed")
+    tm = t.total / hw.hbm_bw
+    penalty = 0.0 if t.feasible else float("inf")
+    return max(tc, tm) + penalty
 
 
 def conv_time_estimate(

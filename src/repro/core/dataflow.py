@@ -207,6 +207,74 @@ class GemmProblem:
 
 
 @dataclasses.dataclass(frozen=True)
+class BinaryProblem:
+    """A binary (+-1, xnor-popcount) GEMM on bit-packed operands.
+
+    ``(M, Kp) x (Kp, N)`` over packed uint32 words, where ``Kp`` is the
+    packed reduction depth (32 binary channels per word) and ``n_bits``
+    the *true* pre-packing reduction depth K (``n_bits <= 32 * kp``;
+    slack words/bits are zero-padding that cancels out of the
+    ``K - 2*popcount(xor)`` identity).
+    """
+
+    m: int
+    kp: int
+    n: int
+    n_bits: int
+    out_dtype: str = "int32"
+
+    def __post_init__(self) -> None:
+        if self.n_bits > 32 * self.kp:
+            raise ValueError(
+                f"n_bits={self.n_bits} exceeds packed depth 32*{self.kp}"
+            )
+
+    @property
+    def bit_ops(self) -> int:
+        """xnor + popcount-accumulate pairs, in scalar-bit-op units."""
+        return 2 * self.m * self.n_bits * self.n
+
+    def as_gemm(self) -> GemmProblem:
+        """Packed-word GEMM view used for traffic/footprint accounting."""
+        return GemmProblem(
+            m=self.m, k=self.kp, n=self.n,
+            in_dtype="binary_packed", out_dtype=self.out_dtype,
+            acc_dtype="int32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryEpilogue:
+    """Element-wise tail fused into a binary kernel's accumulator flush.
+
+    Applied in-register to the xnor-popcount dot product before the one
+    HBM output write:
+
+        y = scale * dot + bias + residual
+        out = sign(y) if binarize else y            (sign: y >= 0 -> +1)
+
+    ``scale``/``bias`` cover a folded batchnorm (gamma/sigma and
+    beta - gamma*mu/sigma, per output column); ``binarize`` re-binarizes
+    in-register so chained binary layers never round-trip the int32
+    accumulator (or its float image) through HBM.  All arithmetic before
+    the sign runs in float32.
+
+    The spec is hashable (a jit static argument); operand arrays travel
+    separately (see ``kernels.binary_mm.binary_mm_df``).
+    """
+
+    scale: bool = False
+    bias: bool = False
+    residual: bool = False
+    binarize: bool = False
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.scale or self.bias or self.residual
+                    or self.binarize)
+
+
+@dataclasses.dataclass(frozen=True)
 class ConvProblem:
     """Direct-convolution workload in the paper's notation (Fig. 3).
 

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import cost_model
 from repro.core.dataflow import (
+    BinaryProblem,
     ConvProblem,
     DataflowSpec,
     GemmProblem,
@@ -183,6 +184,57 @@ def explore_conv(
 ) -> List[Candidate]:
     """Ranked conv-blocked candidates (best first)."""
     cands = enumerate_conv_candidates(problem, hw, **kw)
+    return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
+
+
+# ---------------------------------------------------------------------------
+# Binary candidate space (the shapes kernels/binary_mm actually realizes).
+# ---------------------------------------------------------------------------
+def _bkp_options(kp: int) -> List[int]:
+    """Packed-word reduction-panel widths, clamped to the packed depth."""
+    return [w for w in (2, 4, 8, 16) if w <= max(kp, 1)] or [1]
+
+
+def enumerate_binary_candidates(
+    problem: BinaryProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    anchors: Sequence[Stationarity] = (OS, WS, IS),
+) -> List[Candidate]:
+    """All binary dataflows realizable by ``kernels.binary_mm``.
+
+    The kernel lowers the three basic anchors as one ``pallas_call`` each
+    with the packed-word reduction innermost, so the space is anchors x
+    ``(bm, bkp, bn)`` blocks — ``bkp`` counts uint32 words, ``bm``/``bn``
+    are lane-aligned like the GEMM explorer.  Ranking uses
+    ``cost_model.binary_time_estimate`` (bit-op compute at the VPU
+    xor+popcount rate, packed-word byte traffic).
+    """
+    out: List[Candidate] = []
+    for anchor in anchors:
+        for bm, bkp, bn in itertools.product(
+            _block_options(problem.m, hw),
+            _bkp_options(problem.kp),
+            _block_options(problem.n, hw),
+        ):
+            spec = DataflowSpec.basic(
+                anchor, block=(bm, bkp, bn), vmem_budget=hw.vmem_bytes,
+            )
+            t = cost_model.binary_traffic(problem, spec)
+            if not t.feasible:
+                continue
+            est = cost_model.binary_time_estimate(problem, spec, hw)
+            out.append(Candidate(spec, est, t.total, True))
+    return out
+
+
+def explore_binary(
+    problem: BinaryProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    top: int = 5,
+    **kw,
+) -> List[Candidate]:
+    """Ranked binary candidates (best first)."""
+    cands = enumerate_binary_candidates(problem, hw, **kw)
     return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
 
 

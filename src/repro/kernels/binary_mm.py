@@ -1,64 +1,266 @@
-"""Binary (+-1) matmul Pallas kernel: XOR + popcount on packed uint32.
+"""Binary (+-1) matmul Pallas kernels: XOR + popcount on packed uint32.
 
 TPU adaptation of the paper's binary-NN workloads (Fig. 9): the CPU
 bit-serial path has no MXU analogue, so binary GEMMs run on the VPU as
-xor + ``lax.population_count`` with the same OS-anchored dataflow the
-paper found optimal (output tile accumulates in VMEM scratch; packed
-weights stripe-resident).
+xor + ``lax.population_count`` over 32x-packed uint32 words.  PR 3
+brings the binary datapath to parity with the matmul/conv subsystems:
+every ``DataflowSpec`` anchor lowers as ONE ``pl.pallas_call`` with the
+packed-word reduction innermost in the grid and a VMEM int32 scratch
+accumulator — anchors differ only in outer grid order and operand
+residency, exactly like ``matmul_df``:
+
+  anchor=OS : grid (gm, gn, gk) — the output tile is fixed while the
+              packed reduction runs; A/B word-blocks stream per k step.
+  anchor=WS : grid (gn, gm, gk) — the packed weight column-stripe
+              (Kp, bn) is resident per j and fetched once; A streams.
+  anchor=IS : grid (gm, gn, gk) with the packed input row-stripe
+              (bm, Kp) resident per i and fetched once; B streams.
+
+``spec.block`` is ``(bm, bkp, bn)``: ``bkp`` counts uint32 words (32
+binary channels each), enumerated by ``explorer.explore_binary`` and
+ranked by ``cost_model.binary_time_estimate``.
+
+Fused binary epilogue (``core.dataflow.BinaryEpilogue``): the folded
+batchnorm ``scale * dot + bias`` (per output column), an optional
+residual, and sign/threshold re-binarization are applied in-register at
+the scratch flush — so a chain of binary layers emits +-1 int8
+activations directly and the int32 accumulator (or its float image)
+never round-trips HBM between layers.
+
+The +-1 dot product falls out of the popcount identity
+``dot = K - 2 * popcount(a xor b)`` with K = ``n_bits``, the *true*
+pre-packing reduction depth: zero-padded packed words xor to zero on
+both sides and drop out of the popcount, so padding needs no
+post-correction (see ``ops.binary_matmul``).
+
+Validated against ``ref.binary_matmul_ref`` /
+``ref.binary_matmul_fused_ref`` in interpret mode (tests/test_binary):
+bitwise on the binary datapath proper (int32 dots, +-1 binarized
+outputs); un-binarized float epilogue images may differ by 1 ulp where
+XLA contracts the scale/bias stage into an FMA in one lowering only.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.dataflow import BinaryEpilogue, DataflowSpec, IS, OS, WS
 
-def _binary_os_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, n_bits: int):
+
+def _apply_binary_epilogue(epi: Optional[BinaryEpilogue], dot, scale, bias,
+                           residual, out_dtype):
+    """out = sign?(scale * dot + bias + residual), float32 arithmetic.
+
+    Mirrors ``ref.binary_epilogue_ref`` operation-for-operation, with
+    the same per-stage optimization barriers (best-effort: XLA may
+    still contract scale/bias into an FMA under this lowering, a 1-ulp
+    effect on the pre-sign float image only).
+    """
+    if epi is None:
+        return dot.astype(out_dtype)
+    x = dot.astype(jnp.float32)
+    if epi.scale:
+        x = jax.lax.optimization_barrier(x * scale)
+    if epi.bias:
+        x = jax.lax.optimization_barrier(x + bias)
+    if epi.residual:
+        x = jax.lax.optimization_barrier(x + residual.astype(jnp.float32))
+    if epi.binarize:
+        return jnp.where(x >= 0, 1, -1).astype(out_dtype)
+    return x.astype(out_dtype)
+
+
+def _read_binary_epi(epi: Optional[BinaryEpilogue], refs: Sequence):
+    if epi is None:
+        return None, None, None
+    it = iter(refs)
+    scale = next(it)[...] if epi.scale else None
+    bias = next(it)[...] if epi.bias else None
+    residual = next(it)[...] if epi.residual else None
+    return scale, bias, residual
+
+
+def _binary_kernel(a_ref, b_ref, *refs, gk: int, bkp: int, n_bits: int,
+                   a_stripe: bool, b_stripe: bool,
+                   epi: Optional[BinaryEpilogue]):
+    """Shared single-dispatch kernel body for every anchor.
+
+    The reduction over packed-word panels is the innermost grid dim;
+    popcounts accumulate exactly in the int32 scratch and only the
+    final, post-epilogue value reaches HBM.
+    """
+    o_ref, acc_ref = refs[-2], refs[-1]
+    epi_refs = refs[:-2]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]                                     # (bm, bkp) uint32
-    b = b_ref[...]                                     # (bkp, bn) uint32
+    # stripe-resident operands slice the active word panel; streamed
+    # blocks arrive panel-sized already
+    a = a_ref[:, pl.dslice(k * bkp, bkp)] if a_stripe else a_ref[...]
+    b = b_ref[pl.dslice(k * bkp, bkp), :] if b_stripe else b_ref[...]
     x = jnp.bitwise_xor(a[:, :, None], b[None, :, :])  # (bm, bkp, bn)
     pops = jax.lax.population_count(x).astype(jnp.int32).sum(axis=1)
     acc_ref[...] += pops
 
     @pl.when(k == gk - 1)
     def _flush():
-        # dot = K - 2 * popcount(xor)
-        o_ref[...] = (n_bits - 2 * acc_ref[...]).astype(o_ref.dtype)
+        dot = n_bits - 2 * acc_ref[...]
+        scale, bias, residual = _read_binary_epi(epi, epi_refs)
+        o_ref[...] = _apply_binary_epilogue(
+            epi, dot, scale, bias, residual, o_ref.dtype
+        )
+
+
+def binary_mm_df(
+    a_packed: jax.Array,   # (M, Kp) uint32
+    b_packed: jax.Array,   # (Kp, N) uint32
+    n_bits: int,           # true reduction depth K <= 32 * Kp
+    spec: DataflowSpec,
+    out_dtype=None,
+    interpret: bool = False,
+    epilogue: Optional[BinaryEpilogue] = None,
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Packed +-1 GEMM under the given dataflow.  Shapes must tile evenly
+    by ``spec.block`` = (bm, bkp, bn) (use ``ops.binary_matmul`` /
+    ``ops.binary_matmul_fused`` for automatic padding).
+
+    With ``epilogue`` set, ``y = scale * dot + bias + residual`` (then
+    ``sign(y)`` when ``epilogue.binarize``) is applied in-register before
+    the output write: ``scale`` is (1, 1) (per-tensor) or (1, N)
+    (per-output-column, e.g. a folded batchnorm gamma/sigma) float32,
+    ``bias`` is (1, N) float32, ``residual`` is (M, N).
+    """
+    if a_packed.ndim != 2 or b_packed.ndim != 2 \
+            or a_packed.shape[1] != b_packed.shape[0]:
+        raise ValueError(f"bad shapes {a_packed.shape} @ {b_packed.shape}")
+    m, kp = a_packed.shape
+    n = b_packed.shape[1]
+    bm, bkp, bn = spec.block
+    if m % bm or kp % bkp or n % bn:
+        raise ValueError(
+            f"shapes ({m},{kp},{n}) must tile by block {spec.block}"
+        )
+    epi = epilogue if (epilogue is not None and not epilogue.is_noop) else None
+    if epi is not None:
+        if epi.scale:
+            if scale is None:
+                raise ValueError("epilogue.scale set but no scale array")
+            if scale.shape not in ((1, 1), (1, n)):
+                raise ValueError(f"scale shape {scale.shape} != (1,1)/(1,{n})")
+        if epi.bias:
+            if bias is None:
+                raise ValueError("epilogue.bias set but no bias array")
+            if bias.shape != (1, n):
+                raise ValueError(f"bias shape {bias.shape} != (1, {n})")
+        if epi.residual:
+            if residual is None:
+                raise ValueError("epilogue.residual set but no residual array")
+            if residual.shape != (m, n):
+                raise ValueError(
+                    f"residual shape {residual.shape} != ({m}, {n})"
+                )
+    if out_dtype is None:
+        out_dtype = (jnp.int8 if (epi is not None and epi.binarize)
+                     else jnp.float32 if epi is not None
+                     else jnp.int32)
+
+    gm, gk, gn = m // bm, kp // bkp, n // bn
+    # Anchor -> outer grid order + resident stripes (see module docstring).
+    if spec.anchor == OS:
+        grid = (gm, gn, gk)
+        a_stripe = b_stripe = False
+        ij = lambda g0, g1: (g0, g1)
+    elif spec.anchor == WS:
+        grid = (gn, gm, gk)
+        a_stripe, b_stripe = False, True
+        ij = lambda g0, g1: (g1, g0)
+    elif spec.anchor == IS:
+        grid = (gm, gn, gk)
+        a_stripe, b_stripe = True, False
+        ij = lambda g0, g1: (g0, g1)
+    else:
+        raise ValueError(spec.anchor)
+
+    def a_map(g0, g1, k):
+        i, _ = ij(g0, g1)
+        return (i, 0) if a_stripe else (i, k)
+
+    def b_map(g0, g1, k):
+        _, j = ij(g0, g1)
+        return (0, j) if b_stripe else (k, j)
+
+    def o_map(g0, g1, k):
+        i, j = ij(g0, g1)
+        return (i, j)
+
+    def j_map(g0, g1, k):
+        _, j = ij(g0, g1)
+        return (0, j)
+
+    a_block = (bm, kp) if a_stripe else (bm, bkp)
+    b_block = (kp, bn) if b_stripe else (bkp, bn)
+
+    epi_specs = []
+    if epi is not None:
+        if epi.scale:
+            if scale.shape == (1, 1):
+                epi_specs.append(pl.BlockSpec((1, 1), lambda *g: (0, 0)))
+            else:
+                epi_specs.append(pl.BlockSpec((1, bn), j_map))
+        if epi.bias:
+            epi_specs.append(pl.BlockSpec((1, bn), j_map))
+        if epi.residual:
+            epi_specs.append(pl.BlockSpec((bm, bn), o_map))
+    epi_args = []
+    if epi is not None:
+        if epi.scale:
+            epi_args.append(scale)
+        if epi.bias:
+            epi_args.append(bias)
+        if epi.residual:
+            epi_args.append(residual)
+
+    kernel = functools.partial(
+        _binary_kernel, gk=gk, bkp=bkp, n_bits=n_bits,
+        a_stripe=a_stripe, b_stripe=b_stripe, epi=epi,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a_block, a_map),
+            pl.BlockSpec(b_block, b_map),
+            *epi_specs,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_packed, b_packed, *epi_args)
 
 
 def binary_matmul(
-    a_packed: jax.Array,   # (M, Kp) uint32
-    b_packed: jax.Array,   # (Kp, N) uint32
-    n_bits: int,           # true reduction depth K = 32 * Kp
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    n_bits: int,
     bm: int = 128,
     bkp: int = 8,
     bn: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    m, kp = a_packed.shape
-    n = b_packed.shape[1]
-    if m % bm or kp % bkp or n % bn:
-        raise ValueError(f"untileable ({m},{kp},{n}) by ({bm},{bkp},{bn})")
-    gm, gk, gn = m // bm, kp // bkp, n // bn
-    kernel = functools.partial(_binary_os_kernel, gk=gk, n_bits=n_bits)
-    return pl.pallas_call(
-        kernel,
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bkp), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bkp, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(a_packed, b_packed)
+    """Back-compat wrapper: the seed's fixed-tiling OS kernel, now routed
+    through ``binary_mm_df``."""
+    spec = DataflowSpec.basic(OS, block=(bm, bkp, bn))
+    return binary_mm_df(a_packed, b_packed, n_bits, spec,
+                        out_dtype=jnp.int32, interpret=interpret)

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.dataflow import (
-    ConvProblem, DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
+    BinaryEpilogue, BinaryProblem, ConvProblem, DataflowSpec, Epilogue,
+    GemmProblem, Residency, IS, OS, WS,
 )
 from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
@@ -361,23 +362,182 @@ def attention(
     return out[:, :sq].reshape(b, hq, sq, d)
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "backend"))
+def _binary_problem(m: int, kp: int, n: int, n_bits: int,
+                    out_dtype="int32") -> BinaryProblem:
+    return BinaryProblem(m=m, kp=kp, n=n, n_bits=n_bits,
+                         out_dtype=str(jnp.dtype(out_dtype)))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "spec", "backend"))
 def binary_matmul(
     a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
+    spec: Optional[DataflowSpec] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
+    """Packed +-1 GEMM: (M, Kp) x (Kp, N) uint32 -> (M, N) int32 dots.
+
+    ``n_bits`` is the true pre-packing reduction depth K.  With
+    ``spec=None`` the dataflow (anchor AND ``(bm, bkp, bn)`` blocking)
+    comes from the ``core.autotune`` cache keyed on the
+    ``BinaryProblem``.  Zero-padded packed words xor to 0 on both sides
+    and drop out of the popcount, so the ``K - 2*popcount`` identity
+    absorbs the tile padding with no post-correction.
+    """
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
         return ref.binary_matmul_ref(a_packed, b_packed, n_bits)
-    ap = _pad_to(a_packed, (128, 8))
-    bp = _pad_to(b_packed, (8, 128))
-    m, n = a_packed.shape[0], b_packed.shape[1]
-    extra_bits = 32 * (ap.shape[1] - a_packed.shape[1])
-    # zero-padded packed words xor to 0 -> popcount 0 -> contributes +32*pad
-    out = binary_mm.binary_matmul(
-        ap, bp, n_bits + extra_bits, interpret=backend == "interpret"
+    m, kp = a_packed.shape
+    n = b_packed.shape[1]
+    if spec is None:
+        spec = autotune.best_spec(
+            _binary_problem(m, kp, n, n_bits), backend=backend
+        )
+    bm, bkp, bn = spec.block
+    ap = _pad_to(a_packed, (bm, bkp))
+    bp = _pad_to(b_packed, (bkp, bn))
+    spec = spec.with_block((min(bm, ap.shape[0]), min(bkp, ap.shape[1]),
+                            min(bn, bp.shape[1])))
+    out = binary_mm.binary_mm_df(
+        ap, bp, n_bits, spec, out_dtype=jnp.int32,
+        interpret=backend == "interpret",
     )
-    return out[:m, :n] - extra_bits
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "binarize", "spec", "out_dtype",
+                              "backend"),
+)
+def binary_matmul_fused(
+    a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
+    scale: Optional[jax.Array] = None,      # scalar or (N,) folded-BN gamma
+    bias: Optional[jax.Array] = None,       # (N,) folded-BN beta
+    residual: Optional[jax.Array] = None,   # (M, N)
+    binarize: bool = False,
+    spec: Optional[DataflowSpec] = None,
+    out_dtype=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Fused-epilogue binary GEMM: ``y = scale * dot + bias + residual``
+    then ``sign(y)`` when ``binarize``.
+
+    One kernel dispatch per layer: the folded batchnorm and the
+    re-binarization run in-register at the accumulator flush, so chained
+    binary layers emit +-1 int8 activations directly and the int32
+    accumulator never round-trips HBM.  Output dtype defaults to int8
+    (+-1) when ``binarize`` else float32.
+    """
+    m, kp = a_packed.shape
+    n = b_packed.shape[1]
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+        if scale.size == 1:
+            scale = scale.reshape(1, 1)
+        elif scale.size == n:
+            scale = scale.reshape(1, n)
+        else:
+            raise ValueError(
+                f"scale must be scalar or per-output-column (N={n}), "
+                f"got {scale.shape}"
+            )
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, n)
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.binary_matmul_fused_ref(
+            a_packed, b_packed, n_bits, scale=scale, bias=bias,
+            residual=residual, binarize=binarize, out_dtype=out_dtype,
+        )
+    epi = BinaryEpilogue(
+        scale=scale is not None, bias=bias is not None,
+        residual=residual is not None, binarize=binarize,
+    )
+    out_dt = out_dtype or (jnp.int8 if binarize else jnp.float32)
+    if spec is None:
+        spec = autotune.best_spec(
+            _binary_problem(m, kp, n, n_bits, out_dt), backend=backend
+        )
+    bm, bkp, bn = spec.block
+    ap = _pad_to(a_packed, (bm, bkp))
+    bp = _pad_to(b_packed, (bkp, bn))
+    if scale is not None and scale.shape != (1, 1):
+        scale = _pad_to(scale, (1, bn))
+    if bias is not None:
+        bias = _pad_to(bias, (1, bn))
+    if residual is not None:
+        residual = _pad_to(residual, (bm, bn))
+    spec = spec.with_block((min(bm, ap.shape[0]), min(bkp, ap.shape[1]),
+                            min(bn, bp.shape[1])))
+    out = binary_mm.binary_mm_df(
+        ap, bp, n_bits, spec, out_dtype=out_dt,
+        interpret=backend == "interpret",
+        epilogue=epi, scale=scale, bias=bias, residual=residual,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "n_bits", "binarize", "spec",
+                              "out_dtype", "backend"),
+)
+def binary_conv2d(
+    x_packed: jax.Array,   # (N, H, W, Cp) uint32 channel-packed image
+    w_packed: jax.Array,   # (fh, fw, Cp, Cout) uint32
+    stride: int = 1,
+    n_bits: Optional[int] = None,   # true reduction depth fh*fw*cin
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,   # (N, oh, ow, Cout)
+    binarize: bool = False,
+    spec: Optional[DataflowSpec] = None,
+    out_dtype=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Binary NHWC conv (VALID padding) via the implicit-GEMM view.
+
+    The channel-packed image is patch-extracted to the (N*oh*ow,
+    fh*fw*Cp) GEMM view (XLA slices — not a kernel dispatch) and runs
+    through the single-dispatch binary GEMM, optionally with the fused
+    folded-BN/sign epilogue, so a binary convnet layer is ONE
+    ``pallas_call`` end to end.  ``n_bits`` defaults to every packed bit
+    (fh*fw*32*Cp); pass ``fh*fw*cin`` when cin doesn't fill the last
+    word.  With ``spec=None`` the dataflow resolves through the
+    ``core.autotune`` cache keyed on the implicit-GEMM
+    ``BinaryProblem``.
+    """
+    nb, ih, iw, cp = x_packed.shape
+    fh, fw, _, cout = w_packed.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    if n_bits is None:
+        n_bits = fh * fw * 32 * cp
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        return ref.binary_conv2d_ref(
+            x_packed, w_packed, stride, n_bits=n_bits,
+            scale=scale, bias=bias,
+            residual=residual, binarize=binarize, out_dtype=out_dtype,
+        )
+    cols = ref.binary_im2col(x_packed, fh, fw, stride)
+    a = cols.reshape(nb * oh * ow, fh * fw * cp)
+    b = w_packed.reshape(fh * fw * cp, cout)
+    res2 = (residual.reshape(nb * oh * ow, cout)
+            if residual is not None else None)
+    if scale is None and bias is None and res2 is None and not binarize:
+        out = binary_matmul(a, b, n_bits, spec=spec, backend=backend)
+        if out_dtype is not None:
+            out = out.astype(out_dtype)
+    else:
+        out = binary_matmul_fused(
+            a, b, n_bits, scale=scale, bias=bias, residual=res2,
+            binarize=binarize, spec=spec, out_dtype=out_dtype,
+            backend=backend,
+        )
+    return out.reshape(nb, oh, ow, cout)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "backend"))

@@ -177,6 +177,123 @@ def pack_binary(x: jax.Array, axis: int = -1) -> jax.Array:
     return jnp.moveaxis(packed, -1, axis)
 
 
+def unpack_binary(packed: jax.Array, axis: int = -1,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``pack_binary``: uint32 words -> a +-1 tensor whose
+    ``axis`` is 32x longer (bit 1 -> +1, bit 0 -> -1)."""
+    p = jnp.moveaxis(packed, axis, -1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)        # (..., kp, 32)
+    *lead, kp, _ = bits.shape
+    pm1 = (2 * bits.astype(jnp.int32) - 1).reshape(*lead, kp * 32)
+    return jnp.moveaxis(pm1.astype(dtype), -1, axis)
+
+
+def binary_epilogue_ref(
+    dot: jax.Array,                          # (M, N) int32 xnor-popcount dot
+    scale: Optional[jax.Array] = None,       # (1, 1) or (1, N) float32
+    bias: Optional[jax.Array] = None,        # (1, N) float32
+    residual: Optional[jax.Array] = None,    # (M, N)
+    binarize: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """The fused binary tail: ``y = scale * dot + bias + residual`` then
+    ``sign(y)`` (y >= 0 -> +1) when ``binarize``.  Float32 arithmetic in
+    exactly the in-kernel order, with an optimization barrier after each
+    stage pinning this oracle to separate per-stage rounding.  Binarized
+    (+-1) outputs match the kernel bitwise; pre-sign float images may
+    differ by 1 ulp where XLA contracts the kernel's scale/bias stage
+    into an FMA (tests/test_binary)."""
+    x = dot.astype(jnp.float32)
+    if scale is not None:
+        x = jax.lax.optimization_barrier(x * scale.astype(jnp.float32))
+    if bias is not None:
+        x = jax.lax.optimization_barrier(x + bias.astype(jnp.float32))
+    if residual is not None:
+        x = jax.lax.optimization_barrier(x + residual.astype(jnp.float32))
+    if binarize:
+        out = jnp.where(x >= 0, 1, -1)
+        return out.astype(out_dtype or jnp.int8)
+    return x.astype(out_dtype or jnp.float32)
+
+
+def binary_matmul_fused_ref(
+    a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    binarize: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused binary GEMM oracle: the xnor-popcount dot through
+    ``binary_epilogue_ref``."""
+    return binary_epilogue_ref(
+        binary_matmul_ref(a_packed, b_packed, n_bits),
+        scale=scale, bias=bias, residual=residual, binarize=binarize,
+        out_dtype=out_dtype,
+    )
+
+
+def binary_im2col(x_packed: jax.Array, fh: int, fw: int,
+                  stride: int = 1) -> jax.Array:
+    """Patch-extract a packed NHWC image for the implicit-GEMM view.
+
+    x_packed: (N, H, W, Cp) uint32 -> (N, oh, ow, fh*fw*Cp) uint32, tap
+    order (ky, kx, cp) matching a (fh, fw, Cp, Cout) filter reshaped to
+    (fh*fw*Cp, Cout).
+    """
+    n, ih, iw, cp = x_packed.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    taps = []
+    for ky in range(fh):
+        for kx in range(fw):
+            taps.append(
+                x_packed[:, ky : ky + (oh - 1) * stride + 1 : stride,
+                         kx : kx + (ow - 1) * stride + 1 : stride, :]
+            )
+    return jnp.concatenate(taps, axis=-1)
+
+
+def binary_conv2d_ref(
+    x_packed: jax.Array,   # (N, H, W, Cp) uint32
+    w_packed: jax.Array,   # (fh, fw, Cp, Cout) uint32
+    stride: int = 1,
+    n_bits: Optional[int] = None,   # true reduction depth fh*fw*cin
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,   # (N, oh, ow, Cout)
+    binarize: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Binary conv oracle via explicit im2col + the packed GEMM oracle.
+
+    ``n_bits`` defaults to every packed bit (fh*fw*32*Cp); pass
+    ``fh*fw*cin`` when the true channel count doesn't fill the last word.
+    """
+    n, ih, iw, cp = x_packed.shape
+    fh, fw, _, cout = w_packed.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    if n_bits is None:
+        n_bits = fh * fw * 32 * cp
+    cols = binary_im2col(x_packed, fh, fw, stride)
+    a = cols.reshape(n * oh * ow, fh * fw * cp)
+    b = w_packed.reshape(fh * fw * cp, cout)
+    res2 = (residual.reshape(n * oh * ow, cout)
+            if residual is not None else None)
+    if scale is None and bias is None and res2 is None and not binarize:
+        out = binary_matmul_ref(a, b, n_bits)   # raw int32 dots
+        if out_dtype is not None:
+            out = out.astype(out_dtype)
+    else:
+        out = binary_matmul_fused_ref(
+            a, b, n_bits, scale=scale, bias=bias, residual=res2,
+            binarize=binarize, out_dtype=out_dtype,
+        )
+    return out.reshape(n, oh, ow, cout)
+
+
 def quantize_int8(x: jax.Array, axis: int = -1):
     """Symmetric per-axis int8 quantization -> (q, scale)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)

@@ -413,10 +413,81 @@ def fused_dense(
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Binary (+-1, xnor-popcount) layers — the paper's Fig. 9 workload class.
+# ---------------------------------------------------------------------------
+def init_binary_dense(key, d_in: int, d_out: int) -> Params:
+    """A +-1 projection with a folded batchnorm tail.
+
+    Weights are stored bit-packed along the reduction axis
+    (``(d_in/32, d_out)`` uint32 — 32x smaller than an fp32 image);
+    ``scale``/``bias`` hold the folded BN (gamma/sigma,
+    beta - gamma*mu/sigma) applied in the fused kernel epilogue.
+    ``d_in`` must be a multiple of 32 (the packing word width).
+    """
+    from repro.kernels import ref as kref
+
+    if d_in % 32:
+        raise ValueError(f"binary d_in {d_in} must be a multiple of 32")
+    w = jnp.where(jax.random.normal(key, (d_in, d_out)) >= 0, 1.0, -1.0)
+    return {
+        "w_packed": kref.pack_binary(w, axis=0),
+        "scale": jnp.full((d_out,), 1.0 / d_in ** 0.5, jnp.float32),
+        "bias": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def binary_dense(
+    p: Params,
+    x: jax.Array,                 # (..., d_in) real-valued or +-1
+    binarize: bool = True,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Binarize ``x``, project through the fused binary GEMM, and apply
+    the folded BN (+ sign when ``binarize``) in-register.
+
+    One ``pallas_call`` per layer on kernel backends: activations are
+    bit-packed (an XLA shuffle, 32x smaller HBM image), the
+    xnor-popcount dot, BN scale/bias and re-binarization all happen at
+    the accumulator flush, so chained binary layers stream +-1 int8
+    activations instead of round-tripping int32 accumulators.
+    """
+    from repro.kernels import ops as kops, ref as kref
+
+    d_in = x.shape[-1]
+    lead = x.shape[:-1]
+    xp = kref.pack_binary(x.reshape(-1, d_in), axis=1)
+    out = kops.binary_matmul_fused(
+        xp, p["w_packed"], d_in, scale=p["scale"], bias=p["bias"],
+        binarize=binarize, backend=backend,
+    )
+    return out.reshape(*lead, out.shape[-1])
+
+
+def binary_mlp_apply(p: Params, x: jax.Array,
+                     backend: Optional[str] = None) -> jax.Array:
+    """Two chained binary projections (hidden layer re-binarized
+    in-register, output left real-valued for the residual stream)."""
+    h = binary_dense(p["up"], x, binarize=True, backend=backend)
+    return binary_dense(p["down"], h, binarize=False, backend=backend)
+
+
+def init_binary_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": init_binary_dense(k1, d_model, d_ff),
+        "down": init_binary_dense(k2, d_ff, d_model),
+    }
+
+
 def mlp_apply(p: Params, x: jax.Array, cfg=None) -> jax.Array:
     """SwiGLU MLP.  With ``cfg.use_pallas_kernels`` on a TPU runtime the
     three projections run through the fused-epilogue kernel path (the
-    gate's silu is fused into its GEMM's output write)."""
+    gate's silu is fused into its GEMM's output write).  Binary-MLP
+    params (``cfg.binary_mlp`` -> ``init_binary_mlp``) are dispatched on
+    their keys to the xnor-popcount path."""
+    if "up" in p:   # binary MLP params (lm._init_layer under binary_mlp)
+        return binary_mlp_apply(p, x).astype(x.dtype)
     if (cfg is not None and getattr(cfg, "use_pallas_kernels", False)
             and jax.default_backend() == "tpu"):
         gate = fused_dense(x, p["w1"], activation="silu")

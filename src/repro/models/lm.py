@@ -56,8 +56,11 @@ def _init_layer(key, cfg) -> Params:
         p["moe"] = moe_lib.init_moe(ks[2], cfg)
     elif cfg.d_ff and cfg.family != "ssm":
         p["ln2"] = layers.init_rmsnorm(cfg.d_model)["scale"]
-        p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
-                                   cfg.param_dtype)
+        if getattr(cfg, "binary_mlp", False):
+            p["mlp"] = layers.init_binary_mlp(ks[3], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                       cfg.param_dtype)
     if cfg.is_encoder_decoder:
         p["ln_cross"] = layers.init_rmsnorm(cfg.d_model)["scale"]
         p["cross"] = layers.init_attention(ks[4], cfg)
@@ -150,6 +153,29 @@ def hot_conv_problems(cfg, batch: int, seq: int):
         ConvProblem(ih=1, iw=2 * enc_seq + k - 1, fh=1, fw=k, s=2,
                     cin=cfg.d_model, cout=cfg.d_model, n=batch,
                     in_dtype=dt, out_dtype="float32"),
+    ]
+
+
+def hot_binary_problems(cfg, batch: int, seq: int):
+    """The binary (xnor-popcount) workloads of a ``binary_mlp`` config,
+    as ``BinaryProblem`` rows for the ``core.autotune`` spec cache.
+
+    Configs with ``binary_mlp`` route their decoder-layer MLPs through
+    ``layers.binary_mlp_apply`` (``_init_layer`` stores binary params,
+    ``layers.mlp_apply`` dispatches on them) — packed reduction depth
+    ``d/32`` words, true depth ``d`` bits.  Other configs return an
+    empty list.
+    """
+    from repro.core.dataflow import BinaryProblem
+
+    if not getattr(cfg, "binary_mlp", False) or not cfg.d_ff:
+        return []
+    t = batch * seq
+    return [
+        BinaryProblem(m=t, kp=cfg.d_model // 32, n=cfg.d_ff,
+                      n_bits=cfg.d_model, out_dtype="int8"),
+        BinaryProblem(m=t, kp=cfg.d_ff // 32, n=cfg.d_model,
+                      n_bits=cfg.d_ff, out_dtype="float32"),
     ]
 
 

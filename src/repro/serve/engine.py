@@ -74,8 +74,9 @@ class Engine:
         frontend's ``ConvProblem`` shapes — today the whisper frontend is
         stubbed (precomputed frame embeddings), so the conv warm-up is
         cheap forward-keying for when the real frontend lands on
-        ``ops.conv2d_fused``.  Only runs when the model will actually
-        take the Pallas kernel path."""
+        ``ops.conv2d_fused``.  ``binary_mlp`` configs additionally warm
+        their prefill and decode ``BinaryProblem`` shapes.  Only runs
+        when the model will actually take the Pallas kernel path."""
         if not (getattr(self.cfg, "use_pallas_kernels", False)
                 and jax.default_backend() == "tpu"):
             return
@@ -85,7 +86,9 @@ class Engine:
         self._warmed.add(key)
         autotune.warm(lm.hot_gemm_problems(self.cfg, batch, seq)
                       + lm.hot_gemm_problems(self.cfg, batch, 1)
-                      + lm.hot_conv_problems(self.cfg, batch, seq))
+                      + lm.hot_conv_problems(self.cfg, batch, seq)
+                      + lm.hot_binary_problems(self.cfg, batch, seq)
+                      + lm.hot_binary_problems(self.cfg, batch, 1))
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  greedy: bool = True, seed: int = 0) -> np.ndarray:
