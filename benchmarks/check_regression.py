@@ -38,12 +38,15 @@ REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 # baseline file -> suite callable (rerun mode); each accepts out_path
 def _suites():
-    from benchmarks import bench_binary, bench_conv, bench_fused
+    from benchmarks import (
+        bench_attention, bench_binary, bench_conv, bench_fused,
+    )
 
     return {
         "BENCH_fused.json": bench_fused.run,
         "BENCH_conv.json": bench_conv.run,
         "BENCH_binary.json": bench_binary.run_smoke,
+        "BENCH_attention.json": bench_attention.run_smoke,
     }
 
 

@@ -25,6 +25,7 @@ import traceback
 
 def main(argv=None) -> None:
     from benchmarks import (
+        bench_attention,
         bench_basic_dataflows,
         bench_binary,
         bench_conv,
@@ -42,6 +43,7 @@ def main(argv=None) -> None:
         ("fig8_e2e_int8", bench_e2e_int8.run),
         ("fig9_binary", bench_binary.run),
         ("binary", bench_binary.run_smoke),
+        ("attention", bench_attention.run_smoke),
         ("fused_epilogue", bench_fused.run),
         ("fused_conv", bench_conv.run),
         ("roofline", bench_roofline.run),

@@ -5,30 +5,26 @@ enumerated and ranked at most once per distinct workload, per process —
 and, via a small on-disk JSON store, at most once per machine.
 
 Key schema (``_key``): a flat string over every field that changes the
-ranking.  GEMM problems —
+ranking, built generically from the problem registry
+(``core.dataflow.register_problem``) —
 
-    v<CACHE_VERSION>|m|k|n|in_dtype|out_dtype|acc_dtype
+    v<CACHE_VERSION>|<kind>|<key_fields...>
                     |hw=<name>|vmem=<bytes>|backend=<pallas/interpret/xla>
 
-Conv problems (``ConvProblem``) key on the full conv geometry instead of
-the implicit-GEMM collapse (two convs with the same GEMM view but
-different filter/stride have different window reuse and VMEM needs) —
+where ``kind`` tags the subsystem and ``key_fields`` come from its
+registration:
 
-    v<CACHE_VERSION>|conv|n|ih|iw|fh|fw|s|cin|cout|in_dtype|out_dtype
-                    |hw=<name>|vmem=<bytes>|backend=<...>
-
-and resolve through ``explorer.explore_conv`` (conv-blocked specs whose
-``block`` is ``(b_oh, bc, bk)``; see ``cost_model.conv_gemm_view``).
-
-Binary problems (``BinaryProblem``) key on the packed geometry plus the
-true reduction depth (two packings of different-K layers can share a
-``kp`` but differ in bit-ops) —
-
-    v<CACHE_VERSION>|bin|m|kp|n|n_bits|out_dtype
-                    |hw=<name>|vmem=<bytes>|backend=<...>
-
-and resolve through ``explorer.explore_binary`` (``block`` =
-``(bm, bkp, bn)`` with the reduction blocked in packed uint32 words).
+    gemm — m|k|n|in_dtype|out_dtype|acc_dtype
+    conv — full conv geometry n|ih|iw|fh|fw|s|cin|cout|dtypes (two convs
+           with the same implicit-GEMM view but different filter/stride
+           have different window reuse and VMEM needs); specs are
+           conv-blocked ``(b_oh, bc, bk)`` (see
+           ``cost_model.conv_gemm_view``)
+    bin  — packed geometry m|kp|n plus the true reduction depth n_bits
+           (two packings of different-K layers can share a ``kp`` but
+           differ in bit-ops); ``block`` = ``(bm, bkp, bn)`` in words
+    attn — bh|sq|skv|d|group|causal|window|dtype; ``block`` =
+           ``(bq, bkv, d)`` over the OS(flash)/WS(kv-stationary) anchors
 
 Disk location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.  Invalidation: entries embed the key
@@ -42,37 +38,40 @@ added alongside the single-dispatch conv lowering (PR 2) — the conv
 kernel change shifts realized traffic, so v1 entries are orphaned;
 3 = binary keys added alongside the explored binary anchors (PR 3) —
 the binary kernel's blocking became spec-driven, so v2 entries are
-orphaned.
+orphaned; 4 = registry-generic keys (every kind is tagged, GEMM keys
+gained the ``gemm`` segment) + attention keys (PR 4).
 
 An optional *empirical refinement* pass (``refine=True``) re-ranks the
-analytical top-k by interpret-mode wall clock (``explorer.empirical_rank``)
-before caching, trading one-off tuning time for a measured winner — the
-PolyDL observation that autotuned selection over a pruned space beats a
-purely analytical pick.  With ``refine=None`` (the default) the pass is
-enabled by setting ``REPRO_AUTOTUNE_REFINE=1`` in the environment; it
-changes only which feasible spec is picked, never the numerics of the
-op that consumes it.
+analytical top-k by interpret-mode wall clock before caching, trading
+one-off tuning time for a measured winner — the PolyDL observation that
+autotuned selection over a pruned space beats a purely analytical pick.
+The re-rank runs through the registration's ``measure`` hook, so every
+registered subsystem (GEMM, conv, binary, attention) refines the same
+way.  With ``refine=None`` (the default) the pass is enabled by setting
+``REPRO_AUTOTUNE_REFINE=1`` in the environment; it changes only which
+feasible spec is picked, never the numerics of the op that consumes it.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
-from typing import Dict, Iterable, List, Optional, Union
+from typing import Any, Dict, Iterable, List, Optional
 
 from repro.core import cost_model, explorer
 from repro.core.dataflow import (
-    BinaryProblem,
-    ConvProblem,
     DataflowSpec,
-    GemmProblem,
     Residency,
     Stationarity,
+    registration_for,
 )
 
-CACHE_VERSION = 3
+CACHE_VERSION = 4
 
-Problem = Union[GemmProblem, ConvProblem, BinaryProblem]
+# Any problem type carrying a ``core.dataflow`` registration resolves
+# here — deliberately not a closed Union, so onboarding a subsystem
+# never edits this module.
+Problem = Any
 
 _memory: Dict[str, DataflowSpec] = {}
 _disk_loaded = False
@@ -87,25 +86,9 @@ _stats = {
 
 def _key(problem: Problem, hw: cost_model.HardwareSpec,
          backend: str) -> str:
-    if isinstance(problem, ConvProblem):
-        head = [
-            "conv", str(problem.n), str(problem.ih), str(problem.iw),
-            str(problem.fh), str(problem.fw), str(problem.s),
-            str(problem.cin), str(problem.cout),
-            problem.in_dtype, problem.out_dtype,
-        ]
-    elif isinstance(problem, BinaryProblem):
-        head = [
-            "bin", str(problem.m), str(problem.kp), str(problem.n),
-            str(problem.n_bits), problem.out_dtype,
-        ]
-    else:
-        head = [
-            str(problem.m), str(problem.k), str(problem.n),
-            problem.in_dtype, problem.out_dtype, problem.acc_dtype,
-        ]
+    reg = registration_for(problem)
     return "|".join([
-        f"v{CACHE_VERSION}", *head,
+        f"v{CACHE_VERSION}", reg.kind, *reg.key_fields(problem),
         f"hw={hw.name}", f"vmem={hw.vmem_bytes}", f"backend={backend}",
     ])
 
@@ -197,17 +180,21 @@ def best_spec(
 ) -> DataflowSpec:
     """Cached explorer pick for ``problem`` on ``hw``/``backend``.
 
-    ``GemmProblem``s rank via ``explorer.explore``; ``ConvProblem``s via
-    ``explorer.explore_conv`` and return *conv-blocked* specs (``block``
-    = ``(b_oh, bc, bk)``); ``BinaryProblem``s via
-    ``explorer.explore_binary`` (``block`` = ``(bm, bkp, bn)`` in packed
-    words).  Empirical refinement applies to GEMM problems only (the
-    interpret-mode re-rank runs ``ops.matmul``); ``refine=None`` defers
-    to the ``REPRO_AUTOTUNE_REFINE=1`` env flag (default off).
+    Fully registry-driven: any problem type registered via
+    ``core.dataflow.register_problem`` resolves here — the cache key,
+    the candidate enumeration (through the generic ``explorer.explore``)
+    and the optional empirical refinement all come from the problem's
+    registration.  Block semantics are per-subsystem (GEMM
+    ``(bm, bk, bn)``, conv ``(b_oh, bc, bk)``, binary ``(bm, bkp, bn)``
+    in packed words, attention ``(bq, bkv, d)``).  ``refine=None``
+    defers to the ``REPRO_AUTOTUNE_REFINE=1`` env flag (default off);
+    the re-rank runs the registration's ``measure`` hook on the
+    analytical top-k.
     """
     if refine is None:
         refine = refine_enabled()
     _load_disk()
+    reg = registration_for(problem)
     key = _key(problem, hw, backend)
     _stats["lookups"] += 1
     spec = _memory.get(key)
@@ -216,19 +203,13 @@ def best_spec(
         return spec
     _stats["misses"] += 1
     _stats["enumerations"] += 1
-    is_conv = isinstance(problem, ConvProblem)
-    is_binary = isinstance(problem, BinaryProblem)
-    explore_fn = (explorer.explore_conv if is_conv
-                  else explorer.explore_binary if is_binary
-                  else explorer.explore)
-    ranked = explore_fn(problem, hw, top=max(1, refine_top))
+    ranked = explorer.explore(problem, hw, top=max(1, refine_top))
     if not ranked:
         raise ValueError(f"no feasible dataflow for {problem}")
     spec = ranked[0].spec
-    if refine and not (is_conv or is_binary) and len(ranked) > 1:
-        measured = explorer.empirical_rank(
-            problem, [c.spec for c in ranked], interpret=True
-        )
+    if refine and reg.measure is not None and len(ranked) > 1:
+        measured = reg.measure(problem, [c.spec for c in ranked],
+                               interpret=True)
         spec = measured[0][0]
     _memory[key] = spec
     if not _defer_save:
@@ -241,8 +222,9 @@ def warm(
     hw: cost_model.HardwareSpec = cost_model.V5E,
     backend: str = "pallas",
 ) -> List[DataflowSpec]:
-    """Pre-populate the cache for a known set of hot workloads (GEMM,
-    conv and binary problems mix freely).
+    """Pre-populate the cache for a known set of hot workloads (any
+    registered problem types — GEMM, conv, binary, attention — mix
+    freely).
 
     Misses are batched into a single disk write at the end instead of
     one full-store rewrite per problem.  Problems with no feasible

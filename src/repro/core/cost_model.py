@@ -20,6 +20,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.dataflow import (
     ANCHOR_GRID_ORDER,
+    AttentionProblem,
     BinaryProblem,
     ConvProblem,
     DataflowSpec,
@@ -400,6 +401,115 @@ def conv_time_estimate(
     tm = t.total / hw.hbm_bw
     feasible = conv_vmem_footprint(p, spec) <= spec.vmem_budget
     return max(tc, tm) + (0.0 if feasible else float("inf"))
+
+
+# Attention: online-softmax statistics ride in (bq, 128)-shaped f32 lanes
+# next to the (bq, d) f32 accumulator (see kernels/attention_df).
+ATTN_STAT_LANES = 256   # m + l, 128 lanes each
+_F32 = 4
+
+
+def attention_block_clamp(sq: int, skv: int, bq: int,
+                          bkv: int) -> Tuple[int, int]:
+    """The ``(bq, bkv)`` the attention kernels actually realize for true
+    lengths ``(sq, skv)``: blocks clamp to the 8-padded sequence, and
+    ``sq == 1`` forces the single-q-row decode fast path (no q blocking).
+
+    The single source of this rule — ``ops.attention`` applies it before
+    padding and the cost model mirrors it here, so ranking and realized
+    kernel can never drift apart.
+    """
+    bq = 1 if sq <= 1 else max(1, min(bq, -(-sq // 8) * 8))
+    bkv = max(1, min(bkv, -(-max(skv, 1) // 8) * 8))
+    return bq, bkv
+
+
+def _attn_padded(p: AttentionProblem, spec: DataflowSpec):
+    bq, bkv = attention_block_clamp(p.sq, p.skv, spec.block[0],
+                                    spec.block[1])
+    sqp = _ceil(p.sq, bq) * bq
+    skvp = _ceil(p.skv, bkv) * bkv
+    return bq, bkv, sqp, skvp
+
+
+def attention_vmem_footprint(p: AttentionProblem,
+                             spec: DataflowSpec) -> int:
+    """Peak VMEM bytes claimed by the realized attention kernel.
+
+    Both anchors double-buffer the streamed q and KV blocks; the
+    anchor-dependent term is where the running (acc, m, l) state lives —
+    VMEM scratch for the whole KV sweep under OS, a double-buffered
+    revisited block under WS.
+    """
+    bq, bkv, _, _ = _attn_padded(p, spec)
+    ib = dtype_bytes(p.dtype)
+    state = bq * (p.d + ATTN_STAT_LANES) * _F32
+    foot = 2 * bq * p.d * ib              # q block
+    foot += 2 * 2 * bkv * p.d * ib        # k and v blocks
+    if spec.anchor == OS:
+        foot += 2 * bq * p.d * ib         # output block
+        foot += state                     # scratch acc + stats
+    else:                                 # WS: state revisited through HBM
+        foot += 2 * state
+    return foot
+
+
+def attention_traffic(p: AttentionProblem, spec: DataflowSpec) -> Traffic:
+    """HBM bytes moved by the attention kernel realizing ``spec``.
+
+    Operand classes: IS = Q, WS = K+V, OS = output / running state.
+
+      OS (flash)          — Q and O move once; KV is re-streamed once
+                            per q tile (``gq`` sweeps).
+      WS (kv-stationary)  — KV moves exactly once; Q is re-streamed per
+                            KV block and the (acc, m, l) partials
+                            read-modify-write HBM once per KV block.
+
+    Full-mask accounting: causal/window sparsity scales the visited
+    block count of both anchors identically and cancels out of the
+    OS-vs-WS ranking, so it is deliberately not modeled.
+    """
+    bq, bkv, sqp, skvp = _attn_padded(p, spec)
+    gq, gkv = _ceil(sqp, bq), _ceil(skvp, bkv)
+    ib = dtype_bytes(p.dtype)
+    Q = p.bh * sqp * p.d * ib
+    KV = 2 * p.bh * skvp * p.d * ib       # per-q-head-row image of K and V
+    O = p.bh * sqp * p.d * ib
+    state = p.bh * sqp * (p.d + ATTN_STAT_LANES) * _F32
+    reads: Dict[Stationarity, int] = {}
+    writes: Dict[Stationarity, int] = {IS: 0, WS: 0, OS: 0}
+    if spec.anchor == OS:
+        reads[IS] = Q
+        reads[WS] = gq * KV
+        reads[OS] = 0
+        writes[OS] = O
+    elif spec.anchor == WS:
+        reads[IS] = gkv * Q
+        reads[WS] = KV
+        reads[OS] = gkv * state
+        writes[OS] = gkv * state
+    else:
+        raise ValueError(f"attention admits OS/WS anchors, not {spec.anchor}")
+    foot = attention_vmem_footprint(p, spec)
+    return Traffic(reads=reads, writes=writes, vmem_peak=foot,
+                   feasible=foot <= spec.vmem_budget)
+
+
+def attention_time_estimate(
+    p: AttentionProblem, spec: DataflowSpec, hw: HardwareSpec = V5E
+) -> float:
+    """max(compute, memory) estimate for ranking attention dataflows.
+
+    Compute charges the QK^T/PV dots at the MXU rate of ``p.dtype`` plus
+    the online-softmax per-score ops at the VPU (float32) rate; memory
+    comes from ``attention_traffic`` (anchor-dependent KV re-streaming
+    and state round-trips).
+    """
+    t = attention_traffic(p, spec)
+    tc = (p.dot_flops / hw.peak_flops_for(p.dtype)
+          + p.softmax_ops / hw.peak_flops_for("float32"))
+    tm = t.total / hw.hbm_bw
+    return max(tc, tm) + (0.0 if t.feasible else float("inf"))
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 
 class Stationarity(str, enum.Enum):
@@ -329,6 +329,62 @@ class ConvProblem:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class AttentionProblem:
+    """Shape/mask description of a (GQA) attention workload.
+
+    ``bh`` is the folded batch * q-heads leading dim the kernels run
+    over; ``group`` q heads share each KV head (``bh // group`` KV
+    rows).  ``sq``/``skv`` are the *true* (pre-padding) sequence
+    lengths; the kernels right-align the q rows against the KV length,
+    so the decode step is simply ``sq=1, skv=<cache length>``.
+
+    The anchor choice maps the paper's dataflows onto attention:
+      OS — the output tile (a block of q rows) is anchored; online-
+           softmax statistics live in VMEM scratch across the KV sweep
+           (flash attention); KV blocks stream per q tile.
+      WS — the KV block is anchored (fetched exactly once) while the
+           (acc, m, l) running partials round-trip HBM once per KV
+           block — the paper's WS output-traffic pathology at
+           attention scale.
+    ``DataflowSpec.block`` for attention is ``(bq, bkv, d)``.
+    """
+
+    bh: int
+    sq: int
+    skv: int
+    d: int
+    group: int = 1
+    causal: bool = True
+    window: Optional[int] = None
+    dtype: str = "float32"
+
+    def __post_init__(self) -> None:
+        if self.bh % max(self.group, 1):
+            raise ValueError(
+                f"bh={self.bh} not divisible by group={self.group}"
+            )
+
+    @property
+    def bh_kv(self) -> int:
+        return self.bh // max(self.group, 1)
+
+    @property
+    def dot_flops(self) -> int:
+        """QK^T + PV MXU flops (full-mask accounting: mask sparsity
+        scales both anchors identically, so it cancels out of ranking)."""
+        return 4 * self.bh * self.sq * self.skv * self.d
+
+    @property
+    def softmax_ops(self) -> int:
+        """Per-score VPU work: max, sub, exp, sum, rescale-mul, fma."""
+        return 6 * self.bh * self.sq * self.skv
+
+    @property
+    def flops(self) -> int:
+        return self.dot_flops
+
+
 # Grid iteration orders per anchor (innermost dim last). The anchored
 # operand's block index is constant across the innermost dim(s); see
 # kernels/matmul_df for the realization.
@@ -337,3 +393,91 @@ ANCHOR_GRID_ORDER = {
     WS: ("k", "n", "m"),  # weight tile (k,n) fixed while m sweeps -> out RMW
     IS: ("m", "k", "n"),  # input tile (m,k) fixed while n sweeps -> out RMW
 }
+
+
+# ---------------------------------------------------------------------------
+# Problem registry: one generic pipeline for every dataflow subsystem.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ProblemRegistration:
+    """How a problem type plugs into the generic explore/autotune pipeline.
+
+    Onboarding a new dataflow subsystem (depthwise conv, SSM scan, ...)
+    is one ``register_problem`` call supplying:
+
+      kind            — short cache-key tag (``gemm``/``conv``/``bin``/
+                        ``attn``); becomes the second key segment after
+                        the schema version.
+      problem_cls     — the frozen dataclass describing the workload.
+      key_fields      — problem -> tuple of strings covering every field
+                        that changes the ranking (the cache key head).
+      enumerate       — (problem, hw, **kw) -> List[explorer.Candidate]
+                        of realizable specs.  This hook OWNS the
+                        candidate space: it must itself apply the
+                        VMEM-fit filter and attach the cost estimate to
+                        each candidate (using the two hooks below), so
+                        the generic pipeline only sorts what it returns.
+      time_estimate   — (problem, spec, hw) -> est. seconds; the cost
+                        function ``enumerate`` ranks with, re-exposed
+                        here so callers can score a spec for any
+                        registered problem without per-type imports.
+      vmem_footprint  — (problem, spec) -> peak VMEM bytes claimed by
+                        the realized kernel; the feasibility check
+                        ``enumerate`` filters with, re-exposed likewise.
+      measure         — optional (problem, specs, interpret=True) ->
+                        sorted [(spec, seconds)] empirical re-rank hook
+                        used by ``autotune.best_spec(refine=True)``.
+
+    ``core.explorer`` registers the four built-in subsystems at import;
+    ``core.autotune`` and ``explorer.explore`` dispatch through this
+    table and contain no per-problem-type branches.
+    """
+
+    kind: str
+    problem_cls: type
+    key_fields: Callable[[Any], Tuple[str, ...]]
+    enumerate: Callable[..., Any]
+    time_estimate: Callable[..., float]
+    vmem_footprint: Callable[[Any, "DataflowSpec"], int]
+    measure: Optional[Callable[..., Any]] = None
+
+
+_REGISTRY: Dict[type, ProblemRegistration] = {}
+
+
+def register_problem(reg: ProblemRegistration) -> ProblemRegistration:
+    """Register (or re-register) a problem type's subsystem hooks.
+
+    ``kind`` tags must be unique across problem types — two subsystems
+    sharing one would mint colliding ``autotune`` cache keys, silently
+    serving one type's cached spec (whose block semantics differ) to
+    the other.
+    """
+    for cls, existing in _REGISTRY.items():
+        if existing.kind == reg.kind and cls is not reg.problem_cls:
+            raise ValueError(
+                f"kind {reg.kind!r} is already registered for "
+                f"{cls.__name__}; cache keys would collide"
+            )
+    _REGISTRY[reg.problem_cls] = reg
+    return reg
+
+
+def registration_for(problem_or_cls) -> ProblemRegistration:
+    """The registration for a problem instance or class (KeyError-free:
+    raises TypeError naming the unregistered type)."""
+    cls = (problem_or_cls if isinstance(problem_or_cls, type)
+           else type(problem_or_cls))
+    reg = _REGISTRY.get(cls)
+    if reg is None:
+        raise TypeError(
+            f"{cls.__name__} is not a registered dataflow problem type; "
+            f"known: {sorted(r.kind for r in _REGISTRY.values())} "
+            f"(see core.dataflow.register_problem)"
+        )
+    return reg
+
+
+def registered_kinds() -> Dict[str, type]:
+    """kind tag -> problem class for every registered subsystem."""
+    return {reg.kind: cls for cls, reg in _REGISTRY.items()}

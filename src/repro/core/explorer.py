@@ -4,6 +4,14 @@ Enumerates (anchor, auxiliary residency, block shape) candidates for a
 workload, prunes with the Table-I-derived observations, ranks with the
 TPU traffic model, and optionally validates empirically (interpret-mode
 execution or wall-clock on real hardware).
+
+``explore`` is generic: it dispatches through the problem registry
+(``core.dataflow.register_problem``) to the per-subsystem candidate
+enumerator, so GEMM, conv, binary and attention problems all rank
+through one pipeline.  This module registers the four built-in
+subsystems at import time — onboarding a new one is a single
+``register_problem`` call (enumerator + cost hooks), no edits to
+``explore`` or ``core.autotune``.
 """
 from __future__ import annotations
 
@@ -16,12 +24,16 @@ import numpy as np
 
 from repro.core import cost_model
 from repro.core.dataflow import (
+    AttentionProblem,
     BinaryProblem,
     ConvProblem,
     DataflowSpec,
     GemmProblem,
+    ProblemRegistration,
     Residency,
     Stationarity,
+    register_problem,
+    registration_for,
     IS,
     OS,
     WS,
@@ -106,18 +118,25 @@ def enumerate_candidates(
 
 
 def explore(
-    problem: GemmProblem,
+    problem,
     hw: cost_model.HardwareSpec = cost_model.V5E,
     top: int = 5,
     **kw,
 ) -> List[Candidate]:
-    """Ranked candidates (best first)."""
-    cands = enumerate_candidates(problem, hw, **kw)
+    """Ranked candidates (best first) for ANY registered problem type.
+
+    Dispatches through the problem registry to the subsystem's candidate
+    enumerator (``enumerate_candidates`` for GEMM,
+    ``enumerate_conv_candidates`` for conv, ...); extra keywords are
+    forwarded to it (e.g. ``anchors=...``,
+    ``prune_with_observations=...``).
+    """
+    cands = registration_for(problem).enumerate(problem, hw, **kw)
     return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
 
 
 def best_spec(
-    problem: GemmProblem, hw: cost_model.HardwareSpec = cost_model.V5E
+    problem, hw: cost_model.HardwareSpec = cost_model.V5E
 ) -> DataflowSpec:
     ranked = explore(problem, hw, top=1)
     if not ranked:
@@ -182,9 +201,8 @@ def explore_conv(
     top: int = 5,
     **kw,
 ) -> List[Candidate]:
-    """Ranked conv-blocked candidates (best first)."""
-    cands = enumerate_conv_candidates(problem, hw, **kw)
-    return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
+    """Ranked conv-blocked candidates (alias of the generic ``explore``)."""
+    return explore(problem, hw, top, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -233,9 +251,55 @@ def explore_binary(
     top: int = 5,
     **kw,
 ) -> List[Candidate]:
-    """Ranked binary candidates (best first)."""
-    cands = enumerate_binary_candidates(problem, hw, **kw)
-    return sorted(cands, key=lambda c: (c.est_seconds, c.traffic_bytes))[:top]
+    """Ranked binary candidates (alias of the generic ``explore``)."""
+    return explore(problem, hw, top, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Attention candidate space (kernels/attention_df's realizable anchors).
+# ---------------------------------------------------------------------------
+def _attn_block_options(s: int) -> List[int]:
+    """q/kv block-length candidates clamped to the (8-padded) sequence.
+
+    ``s == 1`` (the decode q side) admits only the single-row block —
+    the ``ops.attention`` fast path skips q blocking entirely there.
+    """
+    if s <= 1:
+        return [1]
+    padded = -(-s // 8) * 8
+    opts = [b for b in (128, 256, 512) if b <= padded]
+    return opts or [padded]
+
+
+def enumerate_attention_candidates(
+    problem: AttentionProblem,
+    hw: cost_model.HardwareSpec = cost_model.V5E,
+    anchors: Sequence[Stationarity] = (OS, WS),
+) -> List[Candidate]:
+    """All attention dataflows realizable by ``kernels.attention_df``.
+
+    The kernel admits two anchors — OS (flash: q-row output tile
+    anchored, online-softmax state in VMEM scratch) and WS
+    (kv-stationary: each KV block fetched once, state round-tripping
+    HBM) — so the space is anchors x ``(bq, bkv)`` blocks with a
+    VMEM-fit filter.  Specs carry ``block = (bq, bkv, d)``.
+    """
+    out: List[Candidate] = []
+    for anchor in anchors:
+        for bq, bkv in itertools.product(
+            _attn_block_options(problem.sq),
+            _attn_block_options(problem.skv),
+        ):
+            spec = DataflowSpec.basic(
+                anchor, block=(bq, bkv, problem.d),
+                vmem_budget=hw.vmem_bytes,
+            )
+            t = cost_model.attention_traffic(problem, spec)
+            if not t.feasible:
+                continue
+            est = cost_model.attention_time_estimate(problem, spec, hw)
+            out.append(Candidate(spec, est, t.total, True))
+    return out
 
 
 def measure(
@@ -288,3 +352,146 @@ def empirical_rank(
         )
         results.append((spec, measure(fn, (a, b), iters=3, warmup=1)))
     return sorted(results, key=lambda sr: sr[1])
+
+
+# ---------------------------------------------------------------------------
+# Per-subsystem empirical measure hooks (autotune's refine=True re-rank).
+# All four draw deterministic operands in the problem's dtype, execute
+# each candidate spec through the public op in interpret mode, and
+# return [(spec, seconds)] sorted fastest-first — ranking-only, never
+# touching the numerics of the op that consumes the winning spec.
+# ---------------------------------------------------------------------------
+def _late_bound(name: str) -> Callable:
+    """A measure hook resolving ``name`` through module globals at call
+    time, so tests can monkeypatch ``empirical_rank``/``_measure_*`` and
+    have the registrations (captured at import) honor the patch."""
+    def hook(problem, specs, interpret: bool = True):
+        return globals()[name](problem, specs, interpret=interpret)
+    return hook
+
+
+def _measure_conv(problem: ConvProblem, specs: Sequence[DataflowSpec],
+                  interpret: bool = True) -> List[Tuple[DataflowSpec, float]]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    dtype = jnp.dtype(problem.in_dtype)
+    xs = (problem.n, problem.ih, problem.iw, problem.cin)
+    ws = (problem.fh, problem.fw, problem.cin, problem.cout)
+    if jnp.issubdtype(dtype, jnp.integer):
+        x = jnp.asarray(rng.integers(-8, 9, size=xs), dtype)
+        w = jnp.asarray(rng.integers(-8, 9, size=ws), dtype)
+    else:
+        x = jnp.asarray(rng.normal(size=xs), dtype)
+        w = jnp.asarray(rng.normal(size=ws), dtype)
+    backend = "interpret" if interpret else None
+    results = []
+    for spec in specs:
+        b_oh, bc, bk = spec.block   # conv-blocked (see conv_gemm_view)
+        fn = lambda a, b, s=spec, t=(b_oh, bc, bk): ops.conv2d(
+            a, b, stride=problem.s, spec=s, b_oh=t[0], bc=t[1], bk=t[2],
+            backend=backend,
+        )
+        results.append((spec, measure(fn, (x, w), iters=3, warmup=1)))
+    return sorted(results, key=lambda sr: sr[1])
+
+
+def _measure_binary(problem: BinaryProblem, specs: Sequence[DataflowSpec],
+                    interpret: bool = True
+                    ) -> List[Tuple[DataflowSpec, float]]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(
+        rng.integers(0, 2 ** 32, size=(problem.m, problem.kp),
+                     dtype=np.uint32))
+    b = jnp.asarray(
+        rng.integers(0, 2 ** 32, size=(problem.kp, problem.n),
+                     dtype=np.uint32))
+    backend = "interpret" if interpret else None
+    results = []
+    for spec in specs:
+        fn = lambda x, y, s=spec: ops.binary_matmul(
+            x, y, n_bits=problem.n_bits, spec=s, backend=backend)
+        results.append((spec, measure(fn, (a, b), iters=3, warmup=1)))
+    return sorted(results, key=lambda sr: sr[1])
+
+
+def _measure_attention(problem: AttentionProblem,
+                       specs: Sequence[DataflowSpec],
+                       interpret: bool = True
+                       ) -> List[Tuple[DataflowSpec, float]]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    dtype = jnp.dtype(problem.dtype)
+    q = jnp.asarray(
+        rng.normal(size=(1, problem.bh, problem.sq, problem.d)), dtype)
+    kv_shape = (1, problem.bh_kv, problem.skv, problem.d)
+    k = jnp.asarray(rng.normal(size=kv_shape), dtype)
+    v = jnp.asarray(rng.normal(size=kv_shape), dtype)
+    backend = "interpret" if interpret else None
+    results = []
+    for spec in specs:
+        fn = lambda qq, kk, vv, s=spec: ops.attention(
+            qq, kk, vv, causal=problem.causal, window=problem.window,
+            spec=s, group=problem.group, backend=backend)
+        results.append((spec, measure(fn, (q, k, v), iters=3, warmup=1)))
+    return sorted(results, key=lambda sr: sr[1])
+
+
+# ---------------------------------------------------------------------------
+# Built-in subsystem registrations.  Everything ``autotune.best_spec``,
+# ``warm`` and the generic ``explore`` need to serve a problem type lives
+# in its registration row — adding a subsystem never edits their code.
+# ---------------------------------------------------------------------------
+register_problem(ProblemRegistration(
+    kind="gemm",
+    problem_cls=GemmProblem,
+    key_fields=lambda p: (str(p.m), str(p.k), str(p.n),
+                          p.in_dtype, p.out_dtype, p.acc_dtype),
+    enumerate=enumerate_candidates,
+    time_estimate=cost_model.gemm_time_estimate,
+    vmem_footprint=cost_model.gemm_vmem_footprint,
+    measure=_late_bound("empirical_rank"),
+))
+
+register_problem(ProblemRegistration(
+    kind="conv",
+    problem_cls=ConvProblem,
+    key_fields=lambda p: (str(p.n), str(p.ih), str(p.iw), str(p.fh),
+                          str(p.fw), str(p.s), str(p.cin), str(p.cout),
+                          p.in_dtype, p.out_dtype),
+    enumerate=enumerate_conv_candidates,
+    time_estimate=cost_model.conv_time_estimate,
+    vmem_footprint=cost_model.conv_vmem_footprint,
+    measure=_late_bound("_measure_conv"),
+))
+
+register_problem(ProblemRegistration(
+    kind="bin",
+    problem_cls=BinaryProblem,
+    key_fields=lambda p: (str(p.m), str(p.kp), str(p.n), str(p.n_bits),
+                          p.out_dtype),
+    enumerate=enumerate_binary_candidates,
+    time_estimate=cost_model.binary_time_estimate,
+    vmem_footprint=lambda p, spec:
+        cost_model.gemm_vmem_footprint(p.as_gemm(), spec),
+    measure=_late_bound("_measure_binary"),
+))
+
+register_problem(ProblemRegistration(
+    kind="attn",
+    problem_cls=AttentionProblem,
+    key_fields=lambda p: (str(p.bh), str(p.sq), str(p.skv), str(p.d),
+                          str(p.group), f"c{int(p.causal)}",
+                          "w-" if p.window is None else f"w{p.window}",
+                          p.dtype),
+    enumerate=enumerate_attention_candidates,
+    time_estimate=cost_model.attention_time_estimate,
+    vmem_footprint=cost_model.attention_vmem_footprint,
+    measure=_late_bound("_measure_attention"),
+))

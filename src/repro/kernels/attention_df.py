@@ -92,6 +92,9 @@ def flash_attention(
 
     ``sq_valid``/``skv_valid`` are the true (pre-padding) lengths; the
     causal mask right-aligns the true q rows against the true kv length.
+    ``bq``/``bkv`` come from the caller — ``ops.attention`` resolves
+    them from the autotuned registry spec and clamps them to the padded
+    sequence (``cost_model.attention_block_clamp``) before calling in.
     """
     bh, sq, d = q.shape
     skv = k.shape[1]
@@ -191,6 +194,13 @@ def kv_stationary_attention(
     """WS-anchored attention: each KV block fetched exactly once, the
     (acc, m, l) running partials round-tripping HBM once per KV block
     (the paper's WS output traffic).
+
+    ``bq``/``bkv`` come from the caller on BOTH lowerings — the
+    interpret-mode single dispatch and the compiled per-KV-block
+    aliased-call loop — so when ``ops.attention`` resolves them from
+    the autotuned registry spec, both anchors honor the autotuned block
+    (previously the compiled loop only ever saw these keyword
+    defaults).
 
     In interpret mode — where this benchmark variant runs and is
     compared against flash attention — it lowers as ONE ``pallas_call``

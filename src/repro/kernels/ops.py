@@ -20,10 +20,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune, cost_model
 from repro.core.dataflow import (
-    BinaryEpilogue, BinaryProblem, ConvProblem, DataflowSpec, Epilogue,
-    GemmProblem, Residency, IS, OS, WS,
+    AttentionProblem, BinaryEpilogue, BinaryProblem, ConvProblem,
+    DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
 )
 from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
@@ -318,10 +318,19 @@ def int8_conv2d_fused(
     )
 
 
+def _attention_problem(bh: int, sq: int, skv: int, d: int, group: int,
+                       causal: bool, window: Optional[int],
+                       dtype) -> AttentionProblem:
+    return AttentionProblem(
+        bh=bh, sq=sq, skv=skv, d=d, group=group, causal=causal,
+        window=window, dtype=str(jnp.dtype(dtype)),
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("group", "causal", "window", "scale", "bq", "bkv",
-                     "backend", "anchor"),
+    static_argnames=("group", "causal", "window", "scale", "spec", "bq",
+                     "bkv", "backend", "anchor"),
 )
 def attention(
     q: jax.Array,            # (B, Hq, Sq, D)
@@ -330,13 +339,28 @@ def attention(
     causal: bool = True,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-    bq: int = 128,
-    bkv: int = 128,
+    spec: Optional[DataflowSpec] = None,
+    bq: Optional[int] = None,
+    bkv: Optional[int] = None,
     backend: Optional[str] = None,
-    anchor: str = "os",      # "os" (flash) or "ws" (kv-stationary)
+    anchor: Optional[str] = None,  # "os" (flash) | "ws" (kv-stationary)
     group: Optional[int] = None,
 ) -> jax.Array:
-    """GQA attention under a dataflow anchor. Returns (B, Hq, Sq, D)."""
+    """GQA attention under a dataflow anchor. Returns (B, Hq, Sq, D).
+
+    With ``spec=None`` the dataflow — the anchor AND the ``(bq, bkv)``
+    blocking — comes from the ``core.autotune`` cache keyed on the
+    ``AttentionProblem`` (keys ``v4|attn|...``): the candidate space
+    {OS/flash, WS/kv-stationary} x blocks is ranked once per distinct
+    (shape, mask, dtype, hardware, backend) and memoized.  An explicit
+    ``anchor``/``bq``/``bkv`` overrides only that field of the resolved
+    spec, so e.g. the benchmark's forced-WS variant still honors the
+    autotuned block.
+
+    Decode (``Sq == 1``) takes a single-q-row fast path: the q side is
+    neither padded nor blocked (``bq = 1``, one q tile), keeping the
+    per-step cost at one kernel dispatch over the KV stream.
+    """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     group = group or hq // hkv
@@ -344,12 +368,29 @@ def attention(
     if backend == "xla":
         return ref.attention_ref(q, k, v, causal=causal, window=window,
                                  scale=scale)
+    if spec is None and (anchor is None or bq is None or bkv is None):
+        spec = autotune.best_spec(
+            _attention_problem(b * hq, sq, skv, d, group, causal, window,
+                               q.dtype),
+            backend=backend,
+        )
+    if spec is not None:
+        if spec.anchor not in (OS, WS):
+            raise ValueError(
+                f"attention admits OS/WS anchors, not {spec.anchor!r}"
+            )
+        if anchor is None:
+            anchor = "os" if spec.anchor == OS else "ws"
+        bq = bq if bq is not None else spec.block[0]
+        bkv = bkv if bkv is not None else spec.block[1]
     qf = q.reshape(b * hq, sq, d)
     kf = k.reshape(b * hkv, skv, d)
     vf = v.reshape(b * hkv, skv, d)
-    bq_ = min(bq, -(-sq // 8) * 8)
-    bkv_ = min(bkv, -(-skv // 8) * 8)
-    qp = _pad_to(qf, (1, bq_, 1))
+    bq_, bkv_ = cost_model.attention_block_clamp(sq, skv, bq, bkv)
+    if sq == 1:
+        qp = qf                 # decode fast path: no q padding/blocking
+    else:
+        qp = _pad_to(qf, (1, bq_, 1))
     kp = _pad_to(kf, (1, bkv_, 1))
     vp = _pad_to(vf, (1, bkv_, 1))
     fn = (attention_df.flash_attention if anchor == "os"

@@ -179,6 +179,35 @@ def hot_binary_problems(cfg, batch: int, seq: int):
     ]
 
 
+def hot_attention_problems(cfg, batch: int, seq: int,
+                           max_len: Optional[int] = None):
+    """The attention workloads of ``cfg``'s decoder layers, as
+    ``AttentionProblem`` rows for the ``core.autotune`` spec cache.
+
+    Two shapes per request geometry: the prefill square (``sq = skv =
+    seq``) that ``layers.attention_apply`` routes through
+    ``ops.attention`` on TPU, and the decode step (``sq = 1``,
+    ``skv = max_len or seq`` — the KV-cache length) so the single-q-row
+    fast path resolves its anchor/blocking from the cache too.
+    Attention-free families (ssm) return an empty list.
+    """
+    from repro.core.dataflow import AttentionProblem
+
+    if not cfg.has_attention:
+        return []
+    dt = str(jnp.dtype(cfg.act_dtype))
+    group = max(1, cfg.n_heads // cfg.n_kv_heads)
+    bh = batch * cfg.n_heads
+    probs = [AttentionProblem(bh=bh, sq=seq, skv=seq, d=cfg.d_head,
+                              group=group, causal=True, window=None,
+                              dtype=dt)]
+    skv_dec = max_len or seq
+    probs.append(AttentionProblem(bh=bh, sq=1, skv=skv_dec, d=cfg.d_head,
+                                  group=group, causal=True, window=None,
+                                  dtype=dt))
+    return probs
+
+
 def layer_windows(cfg) -> Optional[jax.Array]:
     """Per-layer sliding windows as a scannable array (hybrid archs)."""
     if cfg.attn_window is None:

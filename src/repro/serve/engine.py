@@ -70,13 +70,15 @@ class Engine:
         """Populate the dataflow-spec cache for this request shape so the
         prefill and decode traces hit memoized specs instead of
         enumerating the explorer's candidate space.  Covers the hot GEMM
-        shapes and, for configs with a conv frontend (audio family), the
-        frontend's ``ConvProblem`` shapes — today the whisper frontend is
-        stubbed (precomputed frame embeddings), so the conv warm-up is
-        cheap forward-keying for when the real frontend lands on
-        ``ops.conv2d_fused``.  ``binary_mlp`` configs additionally warm
-        their prefill and decode ``BinaryProblem`` shapes.  Only runs
-        when the model will actually take the Pallas kernel path."""
+        shapes, the attention shapes (the prefill square plus the
+        ``sq=1``/``skv=max_len`` decode step), and, for configs with a
+        conv frontend (audio family), the frontend's ``ConvProblem``
+        shapes — today the whisper frontend is stubbed (precomputed
+        frame embeddings), so the conv warm-up is cheap forward-keying
+        for when the real frontend lands on ``ops.conv2d_fused``.
+        ``binary_mlp`` configs additionally warm their prefill and
+        decode ``BinaryProblem`` shapes.  Only runs when the model will
+        actually take the Pallas kernel path."""
         if not (getattr(self.cfg, "use_pallas_kernels", False)
                 and jax.default_backend() == "tpu"):
             return
@@ -86,6 +88,8 @@ class Engine:
         self._warmed.add(key)
         autotune.warm(lm.hot_gemm_problems(self.cfg, batch, seq)
                       + lm.hot_gemm_problems(self.cfg, batch, 1)
+                      + lm.hot_attention_problems(self.cfg, batch, seq,
+                                                  self.max_len)
                       + lm.hot_conv_problems(self.cfg, batch, seq)
                       + lm.hot_binary_problems(self.cfg, batch, seq)
                       + lm.hot_binary_problems(self.cfg, batch, 1))
