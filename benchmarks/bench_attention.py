@@ -1,4 +1,4 @@
-"""Attention dataflow-anchor smoke suite (the PR-4 parity claim).
+"""Attention dataflow-anchor smoke suite (PR-4 parity + PR-5 banding).
 
 The paper's OS-anchored, max-reuse dataflow *predicts* flash attention
 when applied to the attention operator; the WS (kv-stationary) anchor
@@ -11,8 +11,15 @@ backend-independent counters the regression gate tracks —
   * ONE dispatch and ZERO q-side pads for the decode (``Sq = 1``) fast
     path;
   * the analytic HBM traffic of each anchor from
-    ``cost_model.attention_traffic`` (Q/KV/O bytes plus the WS state
-    round-trips — the quantity the explorer ranks on);
+    ``cost_model.attention_traffic`` (banded: only KV blocks the kernel
+    actually visits are charged — the quantity the explorer ranks on);
+  * ``swa_prefill``: the static sliding window shrinks the flash grid
+    to the band (``grid_steps`` — trace-visible grid work, not masked
+    lanes) and the banded traffic below the full-mask accounting;
+  * ``decode_cached``: modeled decode traffic over a ``max_len`` cache
+    buffer scales with the *valid* ``kv_len`` — the regression-tested
+    serving invariant — and an int8 KV cache shrinks the stream
+    further;
 
 and writes them to ``BENCH_attention.json`` at the repo root (or
 ``out_path``) for ``benchmarks/check_regression.py``.
@@ -31,12 +38,15 @@ from benchmarks.common import emit, time_fn
 from repro.core import cost_model, explorer
 from repro.core.dataflow import AttentionProblem, DataflowSpec, OS, WS
 from repro.core.jaxpr_utils import (
-    count_eqns, count_pallas_calls, count_primitive,
+    count_eqns, count_pallas_calls, count_primitive, pallas_grid_steps,
 )
 from repro.kernels import ops, ref
 
 SMOKE_CASE = dict(b=1, hq=4, hkv=2, sq=256, skv=256, d=64)
 DECODE_CASE = dict(b=1, hq=4, hkv=2, sq=1, skv=256, d=64)
+SWA_CASE = dict(b=1, hq=4, hkv=2, sq=512, skv=512, d=64, window=128)
+DECODE_CACHED_CASE = dict(b=1, hq=4, hkv=2, d=64, max_len=1024,
+                          kv_lens=(128, 256, 512, 1024))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_attention.json")
 
@@ -145,15 +155,156 @@ def run_smoke(out_path: str = OUT_PATH) -> Dict:
     emit("attention/explored_best", 0.0,
          f"{best.spec.name} block={best.spec.block}")
 
+    results["swa_prefill"] = _swa_prefill_suite(rng)
+    results["decode_cached"] = _decode_cached_suite(rng)
+
     try:
         with open(out_path, "w") as f:
             json.dump(results, f, indent=1)
             f.write("\n")
     except OSError as e:
-        # keep running (local read-only checkouts), but say so — the CI
-        # regression gate treats a missing fresh JSON as a failure
-        print(f"# WARNING: could not write {out_path}: {e}")
+        _warn_unwritable(out_path, e)
     return results
+
+
+def _warn_unwritable(out_path, e):
+    # keep running (local read-only checkouts), but say so — the CI
+    # regression gate treats a missing fresh JSON as a failure
+    print(f"# WARNING: could not write {out_path}: {e}")
+
+
+def _swa_prefill_suite(rng) -> Dict:
+    """Static sliding-window prefill on the Pallas path.
+
+    The window must reduce *grid work* (the static grid the
+    ``pallas_call`` commits to — skipped KV blocks leave the lowering,
+    they are not masked in-kernel) and the banded traffic accounting,
+    while matching the windowed oracle.
+    """
+    c = SWA_CASE
+    q, k, v = _case_arrays(c, rng)
+    spec = DataflowSpec.basic(OS, block=(128, 128, c["d"]))
+    prob_win = AttentionProblem(
+        bh=c["b"] * c["hq"], sq=c["sq"], skv=c["skv"], d=c["d"],
+        group=c["hq"] // c["hkv"], causal=True, window=c["window"],
+        dtype="float32")
+    prob_full = AttentionProblem(
+        bh=prob_win.bh, sq=c["sq"], skv=c["skv"], d=c["d"],
+        group=prob_win.group, causal=True, window=None, dtype="float32")
+
+    def attn(qq, kk, vv, win=c["window"]):
+        return ops.attention(qq, kk, vv, causal=True, window=win,
+                             spec=spec, backend="interpret")
+
+    def attn_full(qq, kk, vv):
+        return ops.attention(qq, kk, vv, causal=True, spec=spec,
+                             backend="interpret")
+
+    jx_win = jax.make_jaxpr(attn)(q, k, v)
+    jx_full = jax.make_jaxpr(attn_full)(q, k, v)
+    got = attn(q, k, v)
+    want = ref.attention_ref(q, k, v, causal=True, window=c["window"])
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 3e-3, err
+    row = {
+        "name": "swa_prefill",
+        "pallas_calls": count_pallas_calls(jx_win.jaxpr),
+        "grid_steps": pallas_grid_steps(jx_win.jaxpr),
+        "grid_steps_full_mask": pallas_grid_steps(jx_full.jaxpr),
+        "traffic_bytes":
+            cost_model.attention_traffic(prob_win, spec).total,
+        "traffic_bytes_full_mask":
+            cost_model.attention_traffic(prob_full, spec).total,
+        "us": round(time_fn(attn, q, k, v), 1),
+    }
+    assert row["pallas_calls"] == 1, row
+    assert row["grid_steps"] < row["grid_steps_full_mask"], row
+    assert row["traffic_bytes"] < row["traffic_bytes_full_mask"], row
+    emit("attention/swa_prefill", row["us"],
+         f"grid={row['grid_steps']}/{row['grid_steps_full_mask']}"
+         f" bytes={row['traffic_bytes']}/{row['traffic_bytes_full_mask']}")
+    return row
+
+
+def _decode_cached_suite(rng) -> Dict:
+    """Cached decode over a padded ``max_len`` KV buffer.
+
+    The regression-tested serving invariant: modeled HBM traffic (and
+    the kernel's visited blocks) scale with the *valid* ``kv_len``, not
+    the buffer size, and an int8 KV cache shrinks the stream further.
+    Parity runs the real kernel with a traced ``kv_len`` against the
+    oracle on the valid slice.
+    """
+    c = DECODE_CACHED_CASE
+    bh, group = c["b"] * c["hq"], c["hq"] // c["hkv"]
+    dspec = DataflowSpec.basic(OS, block=(1, 128, c["d"]))
+    case = dict(b=c["b"], hq=c["hq"], hkv=c["hkv"], sq=1,
+                skv=c["max_len"], d=c["d"])
+    q, k, v = _case_arrays(case, rng)
+
+    def decode(qq, kk, vv, kl):
+        return ops.attention(qq, kk, vv, causal=True, spec=dspec,
+                             backend="interpret", kv_len=kl)
+
+    rows = []
+    for kl in c["kv_lens"]:
+        prob = AttentionProblem(bh=bh, sq=1, skv=c["max_len"], d=c["d"],
+                                group=group, causal=True, window=None,
+                                dtype="float32", kv_len=kl)
+        got = decode(q, k, v, jnp.int32(kl))
+        want = ref.attention_ref(q, k[:, :, :kl], v[:, :, :kl], causal=True)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 3e-3, (kl, err)
+        jx = jax.make_jaxpr(decode)(q, k, v, jnp.int32(kl))
+        row = {
+            "name": f"decode_kv{kl}",
+            "pallas_calls": count_pallas_calls(jx.jaxpr),
+            "traffic_bytes": cost_model.attention_traffic(prob, dspec).total,
+            "us": round(time_fn(decode, q, k, v, jnp.int32(kl)), 1),
+        }
+        assert row["pallas_calls"] == 1, row
+        rows.append(row)
+        emit(f"attention/decode_kv{kl}", row["us"],
+             f"bytes={row['traffic_bytes']}")
+    # traffic scales with the valid length, not max_len
+    bytes_by_kl = [r["traffic_bytes"] for r in rows]
+    assert all(a < b for a, b in zip(bytes_by_kl, bytes_by_kl[1:])), rows
+    assert 2 * bytes_by_kl[0] < bytes_by_kl[-1], rows
+
+    # int8 KV cache: smaller stream at the same valid length
+    kl8 = c["kv_lens"][-2]
+    prob8 = AttentionProblem(bh=bh, sq=1, skv=c["max_len"], d=c["d"],
+                             group=group, causal=True, window=None,
+                             dtype="float32", kv_len=kl8, kv_dtype="int8")
+    k8 = jnp.clip(jnp.round(k * 16), -127, 127).astype(jnp.int8)
+    v8 = jnp.clip(jnp.round(v * 16), -127, 127).astype(jnp.int8)
+    sc = jnp.full((c["b"], c["hkv"], c["max_len"], 1), 1 / 16, jnp.float32)
+
+    def decode8(qq, kk, vv, ks, vs, kl):
+        return ops.attention(qq, kk, vv, causal=True, spec=dspec,
+                             backend="interpret", kv_len=kl,
+                             k_scale=ks, v_scale=vs)
+
+    got8 = decode8(q, k8, v8, sc, sc, jnp.int32(kl8))
+    want8 = ref.attention_ref(
+        q, (k8 * sc)[:, :, :kl8].astype(jnp.float32),
+        (v8 * sc)[:, :, :kl8].astype(jnp.float32), causal=True)
+    err8 = float(jnp.max(jnp.abs(got8 - want8)))
+    assert err8 < 3e-3, err8
+    jx8 = jax.make_jaxpr(decode8)(q, k8, v8, sc, sc, jnp.int32(kl8))
+    int8_row = {
+        "name": f"decode_int8_kv{kl8}",
+        "pallas_calls": count_pallas_calls(jx8.jaxpr),
+        "traffic_bytes": cost_model.attention_traffic(prob8, dspec).total,
+        "us": round(time_fn(decode8, q, k8, v8, sc, sc, jnp.int32(kl8)), 1),
+    }
+    f32_row = next(r for r in rows if r["name"] == f"decode_kv{kl8}")
+    assert int8_row["pallas_calls"] == 1, int8_row
+    assert int8_row["traffic_bytes"] < f32_row["traffic_bytes"], int8_row
+    rows.append(int8_row)
+    emit(f"attention/decode_int8_kv{kl8}", int8_row["us"],
+         f"bytes={int8_row['traffic_bytes']}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

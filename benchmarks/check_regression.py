@@ -7,12 +7,18 @@ tracked counter regresses:
   *pallas_calls*   kernel dispatches per trace — must not exceed the
                    baseline at all (a second dispatch means a fusion or
                    single-dispatch lowering broke);
+  *grid_steps*     static pallas grid work per trace — must not exceed
+                   the baseline at all (growth means banding stopped
+                   pruning masked KV blocks from the lowering);
   *eqns*           total jaxpr equations — a trace-bloat proxy, allowed
                    ``--tolerance`` relative slack (jax version drift
                    moves it a little);
   *traffic_bytes*  analytic HBM byte counts from the cost model —
                    deterministic, allowed the same slack for cost-model
-                   refinements.
+                   refinements (the ``decode_kv*`` rows of
+                   ``BENCH_attention.json`` make "decode traffic scales
+                   with the valid KV length, not max_len" a gated
+                   invariant).
 
 Wall-clock fields (``*_us``) and ``meta`` blocks are ignored: interpret
 mode is a CPU proxy and CI machines are noisy; the tracked claims are
@@ -76,8 +82,10 @@ def _rule(path: str) -> Tuple[str, bool]:
         return ("wallclock", False)
     if "pallas_calls" in leaf:
         return ("dispatch", True)
-    if "eqns" in leaf:
-        return ("eqns", True)
+    if "grid_steps" in leaf:
+        return ("dispatch", True)   # static grid work: no-exceed, like
+    if "eqns" in leaf:              # dispatch counts (both are exact
+        return ("eqns", True)       # trace-time quantities)
     if "traffic_bytes" in leaf:
         return ("traffic", True)
     return ("other", False)

@@ -23,8 +23,12 @@ registration:
     bin  — packed geometry m|kp|n plus the true reduction depth n_bits
            (two packings of different-K layers can share a ``kp`` but
            differ in bit-ops); ``block`` = ``(bm, bkp, bn)`` in words
-    attn — bh|sq|skv|d|group|causal|window|dtype; ``block`` =
-           ``(bq, bkv, d)`` over the OS(flash)/WS(kv-stationary) anchors
+    attn — bh|sq|skv|d|group|causal|window|dtype|kv_len|kv_dtype;
+           ``block`` = ``(bq, bkv, d)`` over the OS(flash)/
+           WS(kv-stationary) anchors; ``kv_len`` (the valid KV prefix
+           of a padded cache buffer — traced lengths key as the
+           ``kl-`` worst case) and ``kv_dtype`` (int8 KV cache) both
+           move the banded traffic ranking
 
 Disk location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.  Invalidation: entries embed the key
@@ -39,7 +43,11 @@ kernel change shifts realized traffic, so v1 entries are orphaned;
 3 = binary keys added alongside the explored binary anchors (PR 3) —
 the binary kernel's blocking became spec-driven, so v2 entries are
 orphaned; 4 = registry-generic keys (every kind is tagged, GEMM keys
-gained the ``gemm`` segment) + attention keys (PR 4).
+gained the ``gemm`` segment) + attention keys (PR 4); 5 = attention
+keys gained the ``kv_len``/``kv_dtype`` segments alongside the banded
+(block-skipping) cost model and kernel lowerings (PR 5) — v4 attention
+rankings were computed under full-mask accounting, so every v4 entry
+is orphaned.
 
 An optional *empirical refinement* pass (``refine=True``) re-ranks the
 analytical top-k by interpret-mode wall clock before caching, trading
@@ -66,7 +74,7 @@ from repro.core.dataflow import (
     registration_for,
 )
 
-CACHE_VERSION = 4
+CACHE_VERSION = 5
 
 # Any problem type carrying a ``core.dataflow`` registration resolves
 # here — deliberately not a closed Union, so onboarding a subsystem

@@ -432,6 +432,80 @@ def _attn_padded(p: AttentionProblem, spec: DataflowSpec):
     return bq, bkv, sqp, skvp
 
 
+def attention_band(p: AttentionProblem, i: int, bq: int,
+                   bkv: int) -> Tuple[int, int]:
+    """[lo, hi] inclusive KV-block band visible to q tile ``i``.
+
+    The single source of the banding rule: ``kernels.attention_df``
+    mirrors these bounds in its index maps (with traced ``kv_len`` /
+    ``window`` scalars), so the blocks the cost model charges are
+    exactly the blocks the kernel fetches.  ``hi < lo`` means the tile
+    sees nothing (can only happen for all-padding q tiles).
+
+    A KV block ``j`` (positions ``[j*bkv, (j+1)*bkv)``) is visible iff
+      * it starts inside the valid prefix: ``j*bkv < kv_valid``;
+      * (causal) it starts at or before the tile's last q position;
+      * (window) it ends after the tile's first q position minus the
+        window.
+    q rows are right-aligned against the valid KV length
+    (``off = kv_valid - sq``), matching the kernels and the decode
+    convention.
+    """
+    kv_valid = p.kv_valid
+    off = kv_valid - p.sq
+    hi = max(0, _ceil(kv_valid, bkv) - 1)          # last valid block
+    if p.causal:
+        qmax = min((i + 1) * bq, p.sq) - 1 + off   # tile's last true row
+        hi = min(hi, max(0, qmax) // bkv)
+    lo = 0
+    if p.window is not None:
+        qmin = i * bq + off
+        lo = max(0, (qmin - p.window + 1) // bkv)
+    return min(lo, hi), hi
+
+
+def attention_visited_blocks(
+    p: AttentionProblem, bq: int, bkv: int
+) -> Tuple[int, int, int, int]:
+    """(visited (q tile, KV block) pairs, distinct visited KV blocks,
+    gq, gkv) under banded execution with blocks ``(bq, bkv)``.
+
+    ``pairs`` is the number of grid steps that do DMA + compute work
+    (OS re-streams one KV block per pair; WS round-trips one state
+    block per pair); ``kv_blocks`` is how many distinct KV blocks are
+    touched at all (WS fetches each exactly once).  With no window, a
+    full valid prefix and no causal mask this degenerates to the old
+    full-mask accounting (``pairs = gq * gkv``).
+    """
+    bq, bkv = attention_block_clamp(p.sq, p.skv, bq, bkv)
+    gq = _ceil(p.sq, bq)
+    gkv = _ceil(p.skv, bkv)
+    pairs = 0
+    seen = set()
+    for i in range(gq):
+        lo, hi = attention_band(p, i, bq, bkv)
+        if hi < lo:
+            continue
+        pairs += hi - lo + 1
+        seen.update(range(lo, hi + 1))
+    return pairs, len(seen), gq, gkv
+
+
+def attention_banded_ops(p: AttentionProblem, bq: int,
+                         bkv: int) -> Tuple[int, int]:
+    """(dot_flops, softmax_ops) over the *visited* score blocks only.
+
+    Block skipping makes mask sparsity a first-class ranking term: a
+    windowed prefill's compute scales with ``sq * window``-ish visited
+    area, and a cached decode's with the valid KV length — the full-
+    mask ``AttentionProblem.dot_flops`` stays available for rooflines.
+    """
+    pairs, _, _, _ = attention_visited_blocks(p, bq, bkv)
+    bq, bkv = attention_block_clamp(p.sq, p.skv, bq, bkv)
+    scores = pairs * bq * bkv
+    return 4 * p.bh * scores * p.d, 6 * p.bh * scores
+
+
 def attention_vmem_footprint(p: AttentionProblem,
                              spec: DataflowSpec) -> int:
     """Peak VMEM bytes claimed by the realized attention kernel.
@@ -443,9 +517,12 @@ def attention_vmem_footprint(p: AttentionProblem,
     """
     bq, bkv, _, _ = _attn_padded(p, spec)
     ib = dtype_bytes(p.dtype)
+    kvib = dtype_bytes(p.kv_elem_dtype)
     state = bq * (p.d + ATTN_STAT_LANES) * _F32
     foot = 2 * bq * p.d * ib              # q block
-    foot += 2 * 2 * bkv * p.d * ib        # k and v blocks
+    foot += 2 * 2 * bkv * p.d * kvib      # k and v blocks
+    if p.kv_quantized:                    # int8 KV: per-position scales
+        foot += 2 * 2 * bkv * _F32
     if spec.anchor == OS:
         foot += 2 * bq * p.d * ib         # output block
         foot += state                     # scratch acc + stats
@@ -457,37 +534,53 @@ def attention_vmem_footprint(p: AttentionProblem,
 def attention_traffic(p: AttentionProblem, spec: DataflowSpec) -> Traffic:
     """HBM bytes moved by the attention kernel realizing ``spec``.
 
-    Operand classes: IS = Q, WS = K+V, OS = output / running state.
+    Operand classes: IS = Q, WS = K+V (+ per-position dequant scales
+    for an int8 KV cache), OS = output / running state.
 
-      OS (flash)          — Q and O move once; KV is re-streamed once
-                            per q tile (``gq`` sweeps).
-      WS (kv-stationary)  — KV moves exactly once; Q is re-streamed per
-                            KV block and the (acc, m, l) partials
-                            read-modify-write HBM once per KV block.
+      OS (flash)          — Q and O move once; KV blocks stream once
+                            per *visited* (q tile, KV block) pair.
+      WS (kv-stationary)  — each *visited* KV block moves exactly once,
+                            but the sweep is rectangular: for every
+                            swept block ALL ``gq`` q tiles re-read
+                            their q block and round-trip the (acc, m,
+                            l) state (an invisible pair skips compute
+                            yet still carries its state through the
+                            aliased buffers — per-pair banding cannot
+                            remove WS's state traffic, only whole
+                            blocks leave the sweep).
 
-    Full-mask accounting: causal/window sparsity scales the visited
-    block count of both anchors identically and cancels out of the
-    OS-vs-WS ranking, so it is deliberately not modeled.
+    Banded accounting (PR 5): the kernels skip KV blocks beyond the
+    valid ``kv_len`` and fully out-of-band causal/window blocks
+    (``attention_visited_blocks``), so mask sparsity no longer cancels
+    out of the OS-vs-WS ranking — OS's KV re-streaming shrinks with
+    the visited *pairs* while WS shrinks only with the distinct
+    visited *blocks*.  A cached decode therefore moves bytes
+    proportional to the valid KV length, not the ``skv`` buffer size.
     """
     bq, bkv, sqp, skvp = _attn_padded(p, spec)
-    gq, gkv = _ceil(sqp, bq), _ceil(skvp, bkv)
-    ib = dtype_bytes(p.dtype)
-    Q = p.bh * sqp * p.d * ib
-    KV = 2 * p.bh * skvp * p.d * ib       # per-q-head-row image of K and V
-    O = p.bh * sqp * p.d * ib
-    state = p.bh * sqp * (p.d + ATTN_STAT_LANES) * _F32
+    pairs, kv_blocks, gq, gkv = attention_visited_blocks(p, bq, bkv)
+    qib = dtype_bytes(p.dtype)
+    kvib = dtype_bytes(p.kv_elem_dtype)
+    # bytes of one KV position (K + V rows, + two f32 dequant scales
+    # when the cache is int8-quantized), charged per q-head row (GQA
+    # re-use is a VMEM property, not an HBM one, matching the kernels).
+    kv_pos = 2 * p.d * kvib + (2 * _F32 if p.kv_quantized else 0)
+    Q = p.bh * sqp * p.d * qib
+    O = p.bh * sqp * p.d * qib
     reads: Dict[Stationarity, int] = {}
     writes: Dict[Stationarity, int] = {IS: 0, WS: 0, OS: 0}
     if spec.anchor == OS:
         reads[IS] = Q
-        reads[WS] = gq * KV
+        reads[WS] = p.bh * pairs * bkv * kv_pos
         reads[OS] = 0
         writes[OS] = O
     elif spec.anchor == WS:
-        reads[IS] = gkv * Q
-        reads[WS] = KV
-        reads[OS] = gkv * state
-        writes[OS] = gkv * state
+        reads[WS] = p.bh * kv_blocks * bkv * kv_pos
+        steps = kv_blocks * gq          # rectangular sweep (see above)
+        reads[IS] = p.bh * steps * bq * p.d * qib
+        state = p.bh * steps * bq * (p.d + ATTN_STAT_LANES) * _F32
+        reads[OS] = state
+        writes[OS] = state
     else:
         raise ValueError(f"attention admits OS/WS anchors, not {spec.anchor}")
     foot = attention_vmem_footprint(p, spec)
@@ -500,14 +593,16 @@ def attention_time_estimate(
 ) -> float:
     """max(compute, memory) estimate for ranking attention dataflows.
 
-    Compute charges the QK^T/PV dots at the MXU rate of ``p.dtype`` plus
-    the online-softmax per-score ops at the VPU (float32) rate; memory
-    comes from ``attention_traffic`` (anchor-dependent KV re-streaming
-    and state round-trips).
+    Compute charges the QK^T/PV dots at the MXU rate of ``p.dtype``
+    plus the online-softmax per-score ops at the VPU (float32) rate,
+    both over the *visited* score blocks only
+    (``attention_banded_ops``); memory comes from ``attention_traffic``
+    (banded, anchor-dependent KV re-streaming and state round-trips).
     """
     t = attention_traffic(p, spec)
-    tc = (p.dot_flops / hw.peak_flops_for(p.dtype)
-          + p.softmax_ops / hw.peak_flops_for("float32"))
+    dot, soft = attention_banded_ops(p, spec.block[0], spec.block[1])
+    tc = (dot / hw.peak_flops_for(p.dtype)
+          + soft / hw.peak_flops_for("float32"))
     tm = t.total / hw.hbm_bw
     return max(tc, tm) + (0.0 if t.feasible else float("inf"))
 

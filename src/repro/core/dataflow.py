@@ -339,6 +339,23 @@ class AttentionProblem:
     lengths; the kernels right-align the q rows against the KV length,
     so the decode step is simply ``sq=1, skv=<cache length>``.
 
+    Valid-length / window / KV-dtype terms (PR 5):
+      kv_len   — the valid KV prefix length when attending over a
+                 padded KV-cache buffer of ``skv`` slots (``None`` =
+                 all of ``skv`` is valid).  The kernels skip KV blocks
+                 beyond it and the cost model's *banded* accounting
+                 charges only the visited blocks, so decode traffic
+                 scales with the valid length, not the buffer size.
+                 Traced cache lengths key as ``None`` (worst case).
+      window   — causal sliding window; fully-out-of-band KV blocks are
+                 skipped in the kernel grid and dropped from the traffic
+                 accounting (mask sparsity no longer cancels out of the
+                 OS/WS ranking once blocks are skipped).
+      kv_dtype — the K/V element dtype when it differs from the q/out
+                 ``dtype`` (``"int8"`` for a quantized KV cache, which
+                 adds per-position f32 scale reads and shrinks the KV
+                 stream 2-4x).
+
     The anchor choice maps the paper's dataflows onto attention:
       OS — the output tile (a block of q rows) is anchored; online-
            softmax statistics live in VMEM scratch across the KV sweep
@@ -358,11 +375,17 @@ class AttentionProblem:
     causal: bool = True
     window: Optional[int] = None
     dtype: str = "float32"
+    kv_len: Optional[int] = None
+    kv_dtype: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.bh % max(self.group, 1):
             raise ValueError(
                 f"bh={self.bh} not divisible by group={self.group}"
+            )
+        if self.kv_len is not None and not 0 < self.kv_len <= self.skv:
+            raise ValueError(
+                f"kv_len={self.kv_len} outside (0, skv={self.skv}]"
             )
 
     @property
@@ -370,9 +393,26 @@ class AttentionProblem:
         return self.bh // max(self.group, 1)
 
     @property
+    def kv_valid(self) -> int:
+        """The valid KV prefix length (``kv_len`` defaulting to skv)."""
+        return self.kv_len if self.kv_len is not None else self.skv
+
+    @property
+    def kv_elem_dtype(self) -> str:
+        return self.kv_dtype if self.kv_dtype is not None else self.dtype
+
+    @property
+    def kv_quantized(self) -> bool:
+        """True when the K/V cache carries per-position dequant scales
+        (int8 quantization) — a mere precision mismatch (e.g. f32
+        activations over a bf16 cache) has no scale arrays."""
+        return self.kv_elem_dtype in ("int8", "uint8")
+
+    @property
     def dot_flops(self) -> int:
-        """QK^T + PV MXU flops (full-mask accounting: mask sparsity
-        scales both anchors identically, so it cancels out of ranking)."""
+        """QK^T + PV MXU flops over the full (unbanded) score grid.
+        The ranking estimate uses the banded per-block counts from
+        ``cost_model.attention_banded_ops`` instead."""
         return 4 * self.bh * self.sq * self.skv * self.d
 
     @property

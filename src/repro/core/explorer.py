@@ -271,6 +271,26 @@ def _attn_block_options(s: int) -> List[int]:
     return opts or [padded]
 
 
+def _attn_kv_block_options(problem: AttentionProblem) -> List[int]:
+    """KV block-length candidates, window- and valid-length-aware.
+
+    Beyond the generic lane-friendly sizes this adds (a) blocks snapped
+    to the sliding window (a ``bkv`` near ``window`` minimizes the
+    partially-masked fraction of each visited band) and (b) blocks
+    snapped to the valid KV prefix when attending over a mostly-empty
+    cache buffer (``kv_len << skv``).  All candidates stay 8-aligned
+    and within the padded sequence; the banded cost model ranks them.
+    """
+    opts = set(_attn_block_options(problem.skv))
+    padded = -(-max(problem.skv, 1) // 8) * 8
+    if problem.window is not None:
+        opts.add(min(padded, max(8, -(-problem.window // 8) * 8)))
+    if problem.kv_len is not None and problem.kv_len < problem.skv:
+        opts.update(_attn_block_options(problem.kv_len))
+        opts.add(min(padded, max(8, -(-problem.kv_len // 8) * 8)))
+    return sorted(opts)
+
+
 def enumerate_attention_candidates(
     problem: AttentionProblem,
     hw: cost_model.HardwareSpec = cost_model.V5E,
@@ -282,13 +302,16 @@ def enumerate_attention_candidates(
     anchored, online-softmax state in VMEM scratch) and WS
     (kv-stationary: each KV block fetched once, state round-tripping
     HBM) — so the space is anchors x ``(bq, bkv)`` blocks with a
-    VMEM-fit filter.  Specs carry ``block = (bq, bkv, d)``.
+    VMEM-fit filter; KV block options are window- and valid-length-
+    aware (``_attn_kv_block_options``) and ranking runs the *banded*
+    cost model, so KV blocks the kernel skips are never charged.
+    Specs carry ``block = (bq, bkv, d)``.
     """
     out: List[Candidate] = []
     for anchor in anchors:
         for bq, bkv in itertools.product(
             _attn_block_options(problem.sq),
-            _attn_block_options(problem.skv),
+            _attn_kv_block_options(problem),
         ):
             spec = DataflowSpec.basic(
                 anchor, block=(bq, bkv, problem.d),
@@ -431,14 +454,26 @@ def _measure_attention(problem: AttentionProblem,
     q = jnp.asarray(
         rng.normal(size=(1, problem.bh, problem.sq, problem.d)), dtype)
     kv_shape = (1, problem.bh_kv, problem.skv, problem.d)
-    k = jnp.asarray(rng.normal(size=kv_shape), dtype)
-    v = jnp.asarray(rng.normal(size=kv_shape), dtype)
+    kw = {}
+    if problem.kv_elem_dtype == "int8":
+        k = jnp.asarray(rng.integers(-127, 128, size=kv_shape), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 128, size=kv_shape), jnp.int8)
+        sc_shape = kv_shape[:-1] + (1,)
+        kw["k_scale"] = jnp.full(sc_shape, 1 / 127, jnp.float32)
+        kw["v_scale"] = jnp.full(sc_shape, 1 / 127, jnp.float32)
+    else:
+        k = jnp.asarray(rng.normal(size=kv_shape),
+                        jnp.dtype(problem.kv_elem_dtype))
+        v = jnp.asarray(rng.normal(size=kv_shape),
+                        jnp.dtype(problem.kv_elem_dtype))
+    if problem.kv_len is not None:
+        kw["kv_len"] = jnp.asarray(problem.kv_len, jnp.int32)
     backend = "interpret" if interpret else None
     results = []
     for spec in specs:
         fn = lambda qq, kk, vv, s=spec: ops.attention(
             qq, kk, vv, causal=problem.causal, window=problem.window,
-            spec=s, group=problem.group, backend=backend)
+            spec=s, group=problem.group, backend=backend, **kw)
         results.append((spec, measure(fn, (q, k, v), iters=3, warmup=1)))
     return sorted(results, key=lambda sr: sr[1])
 
@@ -486,10 +521,16 @@ register_problem(ProblemRegistration(
 register_problem(ProblemRegistration(
     kind="attn",
     problem_cls=AttentionProblem,
+    # v5 appended the valid-KV-prefix (kl*) and KV-cache-dtype (kd*)
+    # segments: both move the banded traffic ranking (kl bounds the
+    # visited blocks, kd the KV byte stream + scale reads).
     key_fields=lambda p: (str(p.bh), str(p.sq), str(p.skv), str(p.d),
                           str(p.group), f"c{int(p.causal)}",
                           "w-" if p.window is None else f"w{p.window}",
-                          p.dtype),
+                          p.dtype,
+                          "kl-" if p.kv_len is None else f"kl{p.kv_len}",
+                          "kd-" if p.kv_dtype is None
+                          else f"kd{p.kv_dtype}"),
     enumerate=enumerate_attention_candidates,
     time_estimate=cost_model.attention_time_estimate,
     vmem_footprint=cost_model.attention_vmem_footprint,

@@ -41,3 +41,25 @@ def count_eqns(jaxpr) -> int:
     """Total equation count including sub-jaxprs — a dispatch/step-count
     proxy for comparing fused vs unfused lowerings."""
     return _walk(jaxpr, lambda eqn: 1)
+
+
+def pallas_grid_steps(jaxpr) -> int:
+    """Total static grid steps across every ``pallas_call`` in
+    ``jaxpr`` (recursing into sub-jaxprs): the sum over dispatches of
+    the product of their grid dims.
+
+    This is the "grid work" a lowering commits to at trace time — the
+    banded attention kernels shrink it when a static window (or static
+    valid length) proves KV blocks masked, so benchmarks/tests can
+    assert skipped blocks really left the grid rather than being
+    masked in-kernel.
+    """
+    def visit(eqn):
+        if eqn.primitive.name != "pallas_call":
+            return 0
+        steps = 1
+        for dim in eqn.params["grid_mapping"].grid:
+            steps *= int(dim)
+        return steps
+
+    return _walk(jaxpr, visit)

@@ -320,10 +320,12 @@ def int8_conv2d_fused(
 
 def _attention_problem(bh: int, sq: int, skv: int, d: int, group: int,
                        causal: bool, window: Optional[int],
-                       dtype) -> AttentionProblem:
+                       dtype, kv_dtype=None) -> AttentionProblem:
+    dt = str(jnp.dtype(dtype))
+    kdt = None if kv_dtype is None else str(jnp.dtype(kv_dtype))
     return AttentionProblem(
         bh=bh, sq=sq, skv=skv, d=d, group=group, causal=causal,
-        window=window, dtype=str(jnp.dtype(dtype)),
+        window=window, dtype=dt, kv_dtype=None if kdt == dt else kdt,
     )
 
 
@@ -334,10 +336,10 @@ def _attention_problem(bh: int, sq: int, skv: int, d: int, group: int,
 )
 def attention(
     q: jax.Array,            # (B, Hq, Sq, D)
-    k: jax.Array,            # (B, Hkv, Skv, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)  float, or int8 w/ scales
     v: jax.Array,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: Optional[int] = None,         # static sliding window
     scale: Optional[float] = None,
     spec: Optional[DataflowSpec] = None,
     bq: Optional[int] = None,
@@ -345,17 +347,35 @@ def attention(
     backend: Optional[str] = None,
     anchor: Optional[str] = None,  # "os" (flash) | "ws" (kv-stationary)
     group: Optional[int] = None,
+    kv_len: Optional[jax.Array] = None,   # valid KV prefix (traced ok)
+    window_dyn: Optional[jax.Array] = None,   # traced sliding window
+    k_scale: Optional[jax.Array] = None,  # (B, Hkv, Skv, 1) int8-KV scales
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """GQA attention under a dataflow anchor. Returns (B, Hq, Sq, D).
 
     With ``spec=None`` the dataflow — the anchor AND the ``(bq, bkv)``
     blocking — comes from the ``core.autotune`` cache keyed on the
-    ``AttentionProblem`` (keys ``v4|attn|...``): the candidate space
+    ``AttentionProblem`` (keys ``v5|attn|...``): the candidate space
     {OS/flash, WS/kv-stationary} x blocks is ranked once per distinct
     (shape, mask, dtype, hardware, backend) and memoized.  An explicit
     ``anchor``/``bq``/``bkv`` overrides only that field of the resolved
     spec, so e.g. the benchmark's forced-WS variant still honors the
     autotuned block.
+
+    Serving terms (PR 5), all handled inside the kernel grid:
+      * ``kv_len`` — the filled prefix of a padded KV-cache buffer
+        (traced; q rows right-align against it).  KV blocks beyond it
+        are skipped — clamped index maps issue no DMA and ``pl.when``
+        skips their compute — so a decode step's traffic scales with
+        the *valid* cache length, not ``Skv``.  Traced lengths key the
+        autotune lookup as the full-``Skv`` worst case.
+      * ``window`` (static) / ``window_dyn`` (traced) — causal sliding
+        window; a static window additionally shrinks the KV grid
+        dimension to the band width.
+      * ``k_scale``/``v_scale`` — per-position f32 scales of an int8
+        K/V cache, dequantized at the block load; the cache never
+        round-trips HBM as a float copy.
 
     Decode (``Sq == 1``) takes a single-q-row fast path: the q side is
     neither padded nor blocked (``bq = 1``, one q tile), keeping the
@@ -365,13 +385,18 @@ def attention(
     hkv, skv = k.shape[1], k.shape[2]
     group = group or hq // hkv
     backend = backend or ("pallas" if _on_tpu() else "xla")
+    quant = k.dtype == jnp.int8
+    if quant and (k_scale is None or v_scale is None):
+        raise ValueError("int8 K/V need per-position k_scale/v_scale")
+    win_eff = window if window is not None else window_dyn
     if backend == "xla":
-        return ref.attention_ref(q, k, v, causal=causal, window=window,
-                                 scale=scale)
+        return ref.attention_ref(q, k, v, causal=causal, window=win_eff,
+                                 scale=scale, kv_len=kv_len,
+                                 k_scale=k_scale, v_scale=v_scale)
     if spec is None and (anchor is None or bq is None or bkv is None):
         spec = autotune.best_spec(
             _attention_problem(b * hq, sq, skv, d, group, causal, window,
-                               q.dtype),
+                               q.dtype, k.dtype),
             backend=backend,
         )
     if spec is not None:
@@ -393,12 +418,17 @@ def attention(
         qp = _pad_to(qf, (1, bq_, 1))
     kp = _pad_to(kf, (1, bkv_, 1))
     vp = _pad_to(vf, (1, bkv_, 1))
+    ksp = vsp = None
+    if quant:
+        ksp = _pad_to(k_scale.reshape(b * hkv, skv, 1), (1, bkv_, 1))
+        vsp = _pad_to(v_scale.reshape(b * hkv, skv, 1), (1, bkv_, 1))
     fn = (attention_df.flash_attention if anchor == "os"
           else attention_df.kv_stationary_attention)
     out = fn(
         qp, kp, vp, group=group, causal=causal, window=window, scale=scale,
         skv_valid=skv, sq_valid=sq, bq=bq_, bkv=bkv_,
         interpret=backend == "interpret",
+        kv_len=kv_len, window_dyn=window_dyn, k_scale=ksp, v_scale=vsp,
     )
     return out[:, :sq].reshape(b, hq, sq, d)
 

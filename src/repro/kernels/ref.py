@@ -125,13 +125,27 @@ def depthwise_conv2d_ref(
 
 def attention_ref(
     q: jax.Array,              # (B, Hq, Sq, D)
-    k: jax.Array,              # (B, Hkv, Skv, D)
+    k: jax.Array,              # (B, Hkv, Skv, D)  float, or int8 w/ scales
     v: jax.Array,              # (B, Hkv, Skv, D)
     causal: bool = True,
-    window: Optional[int] = None,
+    window: Optional[jax.Array] = None,   # static int or traced scalar
     scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,   # valid KV prefix (traced ok)
+    k_scale: Optional[jax.Array] = None,  # (B, Hkv, Skv, 1) f32 dequant
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """GQA attention with optional causal mask and sliding window."""
+    """GQA attention oracle: causal mask, sliding window (static or
+    traced), valid-KV-prefix masking for padded cache buffers, and
+    int8-KV dequantization via per-position scales.
+
+    q rows right-align against the valid KV length (``kv_len``
+    defaulting to ``Skv``), so a cached decode step is ``sq=1`` over the
+    padded cache with ``kv_len = cache_index + 1``.  The dequant is
+    *folded* — ``k_scale`` multiplies the logits and ``v_scale`` the
+    probabilities (exactly equal to scaling K/V rows, since scales are
+    per position) — so no full-precision copy of the cache is ever
+    materialized; the models' XLA escape hatch relies on this shape.
+    """
     b, hq, sq, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv
@@ -139,18 +153,98 @@ def attention_ref(
     qg = q.reshape(b, hkv, group, sq, d)
     logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
+    if k_scale is not None:
+        logits = logits * k_scale[..., 0][:, :, None, None, :]
     skv = k.shape[2]
-    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned (decode ok)
+    kv_valid = skv if kv_len is None else kv_len
+    qpos = jnp.arange(sq)[:, None] + (kv_valid - sq)  # right-aligned
     kpos = jnp.arange(skv)[None, :]
-    mask = jnp.ones((sq, skv), bool)
+    mask = kpos < kv_valid
     if causal:
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
     logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows
+    if v_scale is not None:
+        p = p * v_scale[..., 0][:, :, None, None, :]
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def banded_swa_attention_ref(q, k, v, window: int, scale) -> jax.Array:
+    """Causal sliding-window attention via static banding (oracle).
+
+    Keys are blocked at the window size; each q block attends to its own
+    and the previous key block (2w keys) — O(S * 2w * d) compute instead
+    of the O(S^2 * d) a masked full attention spends.  Requires a STATIC
+    window, self-attention (q/kv same positions), no cache.
+
+    Demoted from ``models.layers._banded_swa_attention`` (PR 5): the
+    runtime banding now happens inside the Pallas kernel grid
+    (``kernels.attention_df``); this form survives as the test oracle
+    and as the exact-cost-mode FLOP-accounting path (dry-run only —
+    XLA's cost analysis needs the banded einsums materialized to count
+    windowed attention honestly).
+    """
+    from repro.models import flags
+
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    w = int(window)
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qb = q.reshape(b, hkv, g, nb, w, d)
+    kb = k.reshape(b, hkv, nb, w, d)
+    vb = v.reshape(b, hkv, nb, w, d)
+    k_prev = jnp.roll(kb, 1, axis=2)
+    v_prev = jnp.roll(vb, 1, axis=2)
+    kband = jnp.concatenate([k_prev, kb], axis=3)        # (b,hkv,nb,2w,d)
+    vband = jnp.concatenate([v_prev, vb], axis=3)
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w                 # relative
+    band_mask = (kpos <= qpos) & (kpos > qpos - w)        # (w, 2w)
+    first_mask = band_mask & (kpos >= 0)                  # block 0: no wrap
+
+    def one_block(q_i, k_i, v_i, m_i):
+        # q_i (b,hkv,g,w,d); k_i/v_i (b,hkv,2w,d); m_i (w,2w)
+        lg = jnp.einsum("bhgqd,bhkd->bhgqk", q_i.astype(jnp.float32),
+                        k_i.astype(jnp.float32)) * scale
+        lg = jnp.where(m_i[None, None, None], lg, -jnp.inf)
+        p = jax.nn.softmax(lg, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", p, v_i.astype(jnp.float32))
+
+    if flags.EXACT_COST_MODE:
+        # vectorized over blocks (exact flop accounting; memory unused)
+        is_first = (jnp.arange(nb) == 0)[:, None, None]
+        mask = jnp.where(is_first, first_mask[None], band_mask[None])
+        out = jax.vmap(one_block, in_axes=(3, 2, 2, 0), out_axes=3)(
+            qb, kband, vband, mask)
+        out = out.reshape(b, hq, nb * w, d)[:, :, :s]
+        return out.astype(q.dtype)
+
+    # scan over blocks — live memory O(b*h*w*2w)
+    masks = jnp.where((jnp.arange(nb) == 0)[:, None, None],
+                      first_mask[None], band_mask[None])
+
+    def step(_, inp):
+        q_i, k_i, v_i, m_i = inp
+        return None, one_block(q_i, k_i, v_i, m_i)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(step), None,
+        (qb.transpose(3, 0, 1, 2, 4, 5),
+         kband.transpose(2, 0, 1, 3, 4),
+         vband.transpose(2, 0, 1, 3, 4), masks),
+    )                                                     # (nb,b,hkv,g,w,d)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nb * w, d)
+    return out[:, :, :s].astype(q.dtype)
 
 
 def binary_matmul_ref(a_packed: jax.Array, b_packed: jax.Array,

@@ -102,33 +102,42 @@ def init_attention(key, cfg) -> Params:
     return p
 
 
-def _plain_attention(q, k, v, mask_fn, scale):
-    # q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D)
+def _plain_attention(q, k, v, mask_fn, scale, k_scale=None, v_scale=None):
+    # q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); optional per-position
+    # (B, Hkv, Skv, 1) int8-KV dequant scales, folded into the logits /
+    # probabilities so the int8 cache never materializes a float copy.
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, sq, d)
     logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
+    if k_scale is not None:
+        logits = logits * k_scale[..., 0][:, :, None, None, :]
     mask = mask_fn(jnp.arange(sq), jnp.arange(skv))
     logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale[..., 0][:, :, None, None, :]
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, sq, d).astype(q.dtype)
 
 
 def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
-                       kv_chunk: int = 1024):
+                       kv_chunk: int = 1024, k_scale=None, v_scale=None):
     """Double-chunked online-softmax attention.
 
     Outer scan over q chunks, inner scan over kv chunks: live memory is
     O(B * H * q_chunk * kv_chunk) regardless of sequence length — this is
     the OS-anchored dataflow expressed in XLA (the Pallas flash kernel is
-    its TPU-native realization).
+    its TPU-native realization).  int8 K/V dequantize per chunk via the
+    optional per-position scales (folded into logits/probabilities), so
+    live memory stays chunk-sized for quantized caches too.
     """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
+    quant = k_scale is not None
 
     nq = -(-sq // q_chunk)
     qpad = nq * q_chunk - sq
@@ -141,6 +150,14 @@ def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
     qg = qp.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
     kc = kp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
     vc = vp.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    xs = (kc, vc)
+    if quant:
+        def chunk_scales(s):
+            sp = (jnp.pad(s, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+                  if kpad else s)
+            return sp.reshape(b, hkv, nk, kv_chunk, 1).transpose(
+                2, 0, 1, 3, 4)
+        xs = xs + (chunk_scales(k_scale), chunk_scales(v_scale))
 
     def q_step(iq, q_i):
         q_i = q_i.astype(jnp.float32)                    # (b,hkv,g,qc,d)
@@ -148,9 +165,14 @@ def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
 
         def kv_step(carry, inp):
             acc, m, l, j = carry
-            kj, vj = inp
+            if quant:
+                kj, vj, ksj, vsj = inp
+            else:
+                kj, vj = inp
             logits = jnp.einsum("bhgqd,bhkd->bhgqk", q_i,
                                 kj.astype(jnp.float32)) * scale
+            if quant:
+                logits = logits * ksj[..., 0][:, :, None, None, :]
             kpos = j * kv_chunk + jnp.arange(kv_chunk)
             mask = mask_fn(qpos, kpos) & (kpos < skv)[None, :] \
                 & (qpos < sq)[:, None]
@@ -162,6 +184,8 @@ def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
             alpha = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, m - m_safe))
             alpha = jnp.where(jnp.isneginf(m), 0.0, alpha)
             l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+            if quant:
+                p = p * vsj[..., 0][:, :, None, None, :]
             acc = acc * alpha[..., 0][..., None] + jnp.einsum(
                 "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32)
             )
@@ -171,7 +195,7 @@ def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
         m0 = jnp.full((b, hkv, g, q_chunk, 1), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
         (acc, m, l, _), _ = jax.lax.scan(
-            jax.checkpoint(kv_step), (acc0, m0, l0, 0), (kc, vc)
+            jax.checkpoint(kv_step), (acc0, m0, l0, 0), xs
         )
         l = jnp.where(l == 0.0, 1.0, l)
         return (acc / l).astype(q.dtype), iq + 1
@@ -195,69 +219,44 @@ def bidir_attention(q, k, v, scale, chunked_threshold: int = 2048):
     return _plain_attention(q, k, v, mask_fn, scale)
 
 
-def _banded_swa_attention(q, k, v, window: int, scale):
-    """Causal sliding-window attention via static banding.
+def _attention_xla(q, k, v, scale, *, window=None, kv_len=None,
+                   k_scale=None, v_scale=None, chunked_threshold=2048):
+    """The single XLA escape hatch behind ``attention_apply``.
 
-    Keys are blocked at the window size; each q block attends to its own
-    and the previous key block (2w keys) — O(S * 2w * d) compute instead
-    of the O(S^2 * d) a masked full attention spends.  Requires a STATIC
-    window, self-attention (q/kv same positions), no cache.
+    One masked-einsum implementation (``ref.attention_ref`` semantics:
+    causal, static/traced window, valid-KV-prefix mask, folded int8-KV
+    dequant), realized chunked beyond ``chunked_threshold`` so live
+    memory stays O(chunk) for long caches.  The banded-SWA oracle
+    (``ref.banded_swa_attention_ref``) is substituted only under
+    ``flags.EXACT_COST_MODE`` — a dry-run-only analysis mode where
+    XLA's cost_analysis must see the banded einsums to count windowed
+    attention FLOPs honestly; at execution time windowed banding lives
+    in the Pallas kernel grid, not here.
     """
-    b, hq, s, d = q.shape
-    hkv = k.shape[1]
-    g = hq // hkv
-    w = int(window)
-    nb = -(-s // w)
-    pad = nb * w - s
-    if pad:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    qb = q.reshape(b, hkv, g, nb, w, d)
-    kb = k.reshape(b, hkv, nb, w, d)
-    vb = v.reshape(b, hkv, nb, w, d)
-    k_prev = jnp.roll(kb, 1, axis=2)
-    v_prev = jnp.roll(vb, 1, axis=2)
-    kband = jnp.concatenate([k_prev, kb], axis=3)        # (b,hkv,nb,2w,d)
-    vband = jnp.concatenate([v_prev, vb], axis=3)
-    qpos = jnp.arange(w)[:, None]
-    kpos = jnp.arange(2 * w)[None, :] - w                 # relative
-    band_mask = (kpos <= qpos) & (kpos > qpos - w)        # (w, 2w)
-    first_mask = band_mask & (kpos >= 0)                  # block 0: no wrap
+    from repro.kernels import ref as kref
 
-    def one_block(q_i, k_i, v_i, m_i):
-        # q_i (b,hkv,g,w,d); k_i/v_i (b,hkv,2w,d); m_i (w,2w)
-        lg = jnp.einsum("bhgqd,bhkd->bhgqk", q_i.astype(jnp.float32),
-                        k_i.astype(jnp.float32)) * scale
-        lg = jnp.where(m_i[None, None, None], lg, -jnp.inf)
-        p = jax.nn.softmax(lg, axis=-1)
-        return jnp.einsum("bhgqk,bhkd->bhgqd", p, v_i.astype(jnp.float32))
+    sq, skv = q.shape[2], k.shape[2]
+    if (flags.EXACT_COST_MODE and isinstance(window, int)
+            and kv_len is None and sq == skv and sq > 2 * window):
+        return kref.banded_swa_attention_ref(q, k, v, int(window), scale)
+    kv_valid = skv if kv_len is None else kv_len
+    off = kv_valid - sq                       # right-align q rows
 
-    if flags.EXACT_COST_MODE:
-        # vectorized over blocks (exact flop accounting; memory unused)
-        is_first = (jnp.arange(nb) == 0)[:, None, None]
-        mask = jnp.where(is_first, first_mask[None], band_mask[None])
-        out = jax.vmap(one_block, in_axes=(3, 2, 2, 0), out_axes=3)(
-            qb, kband, vband, mask)
-        out = out.reshape(b, hq, nb * w, d)[:, :, :s]
-        return out.astype(q.dtype)
+    def mask_fn(qpos, kpos):
+        qp = (qpos + off)[:, None]
+        kp = kpos[None, :]
+        m = kp <= qp
+        if kv_len is not None:
+            m &= kp < kv_valid
+        if window is not None:
+            m &= kp > qp - window
+        return m
 
-    # runtime: scan over blocks — live memory O(b*h*w*2w)
-    masks = jnp.where((jnp.arange(nb) == 0)[:, None, None],
-                      first_mask[None], band_mask[None])
-
-    def step(_, inp):
-        q_i, k_i, v_i, m_i = inp
-        return None, one_block(q_i, k_i, v_i, m_i)
-
-    _, outs = jax.lax.scan(
-        jax.checkpoint(step), None,
-        (qb.transpose(3, 0, 1, 2, 4, 5),
-         kband.transpose(2, 0, 1, 3, 4),
-         vband.transpose(2, 0, 1, 3, 4), masks),
-    )                                                     # (nb,b,hkv,g,w,d)
-    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, nb * w, d)
-    return out[:, :, :s].astype(q.dtype)
+    if skv > chunked_threshold and not flags.EXACT_COST_MODE:
+        return _chunked_attention(q, k, v, mask_fn, scale,
+                                  k_scale=k_scale, v_scale=v_scale)
+    return _plain_attention(q, k, v, mask_fn, scale,
+                            k_scale=k_scale, v_scale=v_scale)
 
 
 def _quantize_kv(x):
@@ -279,12 +278,26 @@ def attention_apply(
     cache_index: Optional[jax.Array] = None,
     chunked_threshold: int = 2048,
     attend_local: bool = False,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """GQA self-attention. Returns (out, new_kv_cache).
 
+    Every masked branch — plain prefill, KV-cache decode (traced
+    ``cache_index`` / valid length), static and traced sliding windows,
+    int8 KV with per-position scales — dispatches ONE
+    ``kernels.ops.attention`` call on kernel backends: the kernel grid
+    skips KV blocks beyond the valid cache length and outside the
+    window band, and dequantizes int8 K/V at the block load, so decode
+    cost scales with the filled cache, not ``max_len``.
+    ``backend="xla"`` is the single escape hatch (``_attention_xla``:
+    masked einsum, chunked beyond ``chunked_threshold``, dequant folded
+    into logits/probabilities — never a float copy of the cache);
+    ``backend=None`` picks the Pallas kernel on TPU runtimes with
+    ``cfg.use_pallas_kernels``, the escape hatch otherwise.
+
     ``attend_local``: update the cache but attend over the freshly
-    projected K/V (prefill-from-zero: identical math, enables the
-    static banded-SWA path and avoids attending over the padded cache).
+    projected K/V (prefill-from-zero: identical math, and it keeps the
+    attended KV length at ``S`` instead of the padded cache buffer).
     """
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -301,6 +314,9 @@ def attention_apply(
     v = v.transpose(0, 2, 1, 3)
 
     new_cache = None
+    kv_len = None                    # valid attended-KV prefix (traced)
+    k_att, v_att = k, v              # operands actually attended over
+    k_sc = v_sc = None               # int8-KV per-position scales
     if kv_cache is not None:
         ck, cv = kv_cache[0], kv_cache[1]   # (B, Hkv, S_max, Dh) [+ scales]
         int8_kv = ck.dtype == jnp.int8
@@ -324,54 +340,31 @@ def attention_apply(
             new_cache = (ck, cv, cks, cvs)
         else:
             new_cache = (ck, cv)
-        if attend_local:
-            kv_len = None            # attend over the local projections
-        else:
-            if int8_kv:
-                k = (ck.astype(jnp.float32) * new_cache[2]).astype(q.dtype)
-                v = (cv.astype(jnp.float32) * new_cache[3]).astype(q.dtype)
-            else:
-                k, v = ck, cv
+        if not attend_local:
+            k_att, v_att = ck, cv    # int8 stays int8: dequant happens
+            if int8_kv:              # at the kernel block load / folded
+                k_sc, v_sc = cks, cvs
             kv_len = cache_index + s     # traced valid length
-    else:
-        kv_len = None
-
     scale = dh ** -0.5
-    qpos_off = (cache_index if cache_index is not None
-                and not attend_local else 0)
-
-    def mask_fn(qpos, kpos):
-        qp = (qpos + qpos_off)[:, None]
-        kp = kpos[None, :]
-        m = kp <= qp
-        if kv_len is not None:
-            m &= kp < kv_len
-        if window is not None:
-            m &= kp > qp - window
-        return m
-
-    skv = k.shape[2]
-    use_chunked = skv > chunked_threshold and not flags.EXACT_COST_MODE
-    static_window = (
-        window is not None and isinstance(window, (int,))
-        and (kv_cache is None or attend_local)
-        and s == skv and s > 2 * int(window)
-    )
-    if cfg.use_pallas_kernels and jax.default_backend() == "tpu" \
-            and kv_cache is None and window is None:
+    if backend is None:
+        backend = ("pallas" if cfg.use_pallas_kernels
+                   and jax.default_backend() == "tpu" else "xla")
+    if backend == "xla":
+        out = _attention_xla(
+            q, k_att, v_att, scale, window=window, kv_len=kv_len,
+            k_scale=k_sc, v_scale=v_sc,
+            chunked_threshold=chunked_threshold,
+        )
+    else:
         from repro.kernels import ops as kops
 
+        static_window = window if isinstance(window, int) else None
         out = kops.attention(
-            q, k, v, causal=True,
-            window=None, backend="pallas",
+            q, k_att, v_att, causal=True, scale=scale,
+            window=static_window,
+            window_dyn=None if static_window is not None else window,
+            kv_len=kv_len, k_scale=k_sc, v_scale=v_sc, backend=backend,
         )
-    elif static_window:
-        # static sliding window: banded computation, O(S*2w*d)
-        out = _banded_swa_attention(q, k, v, int(window), scale)
-    elif use_chunked:
-        out = _chunked_attention(q, k, v, mask_fn, scale)
-    else:
-        out = _plain_attention(q, k, v, mask_fn, scale)
 
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache

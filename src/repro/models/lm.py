@@ -184,27 +184,38 @@ def hot_attention_problems(cfg, batch: int, seq: int,
     """The attention workloads of ``cfg``'s decoder layers, as
     ``AttentionProblem`` rows for the ``core.autotune`` spec cache.
 
-    Two shapes per request geometry: the prefill square (``sq = skv =
-    seq``) that ``layers.attention_apply`` routes through
-    ``ops.attention`` on TPU, and the decode step (``sq = 1``,
-    ``skv = max_len or seq`` — the KV-cache length) so the single-q-row
-    fast path resolves its anchor/blocking from the cache too.
-    Attention-free families (ssm) return an empty list.
+    Per request geometry: the prefill square (``sq = skv = seq``) and
+    the cached decode step (``sq = 1``, ``skv = max_len or seq`` — the
+    padded KV-cache buffer, whose traced valid length keys as the
+    ``kl-`` worst case) that ``layers.attention_apply`` routes through
+    ``ops.attention`` on TPU.  Sliding-window configs add the windowed
+    variants of both (static windows reach the kernel, so the banded
+    ranking must be warmed for them too), and an int8 KV cache
+    (``cfg.kv_cache_dtype``) keys the decode rows with
+    ``kv_dtype="int8"``.  Attention-free families (ssm) return an
+    empty list.
     """
     from repro.core.dataflow import AttentionProblem
 
     if not cfg.has_attention:
         return []
     dt = str(jnp.dtype(cfg.act_dtype))
+    kv_dt = "int8" if cfg.kv_cache_dtype == "int8" else None
     group = max(1, cfg.n_heads // cfg.n_kv_heads)
     bh = batch * cfg.n_heads
-    probs = [AttentionProblem(bh=bh, sq=seq, skv=seq, d=cfg.d_head,
-                              group=group, causal=True, window=None,
-                              dtype=dt)]
     skv_dec = max_len or seq
-    probs.append(AttentionProblem(bh=bh, sq=1, skv=skv_dec, d=cfg.d_head,
-                                  group=group, causal=True, window=None,
-                                  dtype=dt))
+    windows = [None]
+    if cfg.attn_window is not None:
+        windows.append(int(cfg.attn_window))
+    probs = []
+    for win in windows:
+        probs.append(AttentionProblem(bh=bh, sq=seq, skv=seq, d=cfg.d_head,
+                                      group=group, causal=True, window=win,
+                                      dtype=dt))
+        probs.append(AttentionProblem(bh=bh, sq=1, skv=skv_dec,
+                                      d=cfg.d_head, group=group,
+                                      causal=True, window=win, dtype=dt,
+                                      kv_dtype=kv_dt))
     return probs
 
 
@@ -428,10 +439,11 @@ def forward_hidden(
         enc_out = encode(params, enc_frames, cfg)
 
     windows = layer_windows(cfg)
-    # exact-cost mode with a uniform window: pass the window statically so
-    # the banded SWA path (O(S*2w)) is used and FLOPs are counted honestly
+    # uniform window: pass it statically — every layer shares one value,
+    # and a static window lets the Pallas kernel shrink its KV grid to
+    # the band (and exact-cost mode count banded-SWA FLOPs honestly)
     static_window = None
-    if flags.EXACT_COST_MODE and cfg.attn_window is not None             and cfg.full_attn_every == 0:
+    if cfg.attn_window is not None and cfg.full_attn_every == 0:
         windows = None
         static_window = int(cfg.attn_window)
     positions = jnp.arange(tokens.shape[1])[None, :]
@@ -600,11 +612,18 @@ def decode_step(
     idx = cache["index"]
     positions = jnp.full((tokens.shape[0], 1), idx, jnp.int32)
     windows = layer_windows(cfg)
+    static_window = None
+    if cfg.attn_window is not None and cfg.full_attn_every == 0:
+        # uniform window: static (see forward_hidden) — the decode step's
+        # kernel band then spans ceil(window/bkv)+1 KV blocks, not the
+        # whole max_len cache buffer
+        windows = None
+        static_window = int(cfg.attn_window)
 
     def body(x, scanned):
         lp = scanned["lp"]
         layer_cache = scanned["cache"]
-        window = scanned.get("window")
+        window = scanned.get("window", static_window)
         x, new_cache, _ = layer_apply(
             lp, x, cfg, window=window, positions=positions,
             cache=layer_cache, cache_index=idx,
@@ -667,8 +686,8 @@ def prefill(
             x, NamedSharding(dist.mesh, P(dist.dp_axes, None, None)))
     windows = layer_windows(cfg)
     static_window = None
-    if flags.EXACT_COST_MODE and cfg.attn_window is not None \
-            and cfg.full_attn_every == 0:
+    if cfg.attn_window is not None and cfg.full_attn_every == 0:
+        # uniform window: static (see forward_hidden) — kernel-grid banding
         windows = None
         static_window = int(cfg.attn_window)
     positions = jnp.arange(s)[None, :]

@@ -70,15 +70,18 @@ class Engine:
         """Populate the dataflow-spec cache for this request shape so the
         prefill and decode traces hit memoized specs instead of
         enumerating the explorer's candidate space.  Covers the hot GEMM
-        shapes, the attention shapes (the prefill square plus the
-        ``sq=1``/``skv=max_len`` decode step), and, for configs with a
-        conv frontend (audio family), the frontend's ``ConvProblem``
-        shapes — today the whisper frontend is stubbed (precomputed
-        frame embeddings), so the conv warm-up is cheap forward-keying
-        for when the real frontend lands on ``ops.conv2d_fused``.
-        ``binary_mlp`` configs additionally warm their prefill and
-        decode ``BinaryProblem`` shapes.  Only runs when the model will
-        actually take the Pallas kernel path."""
+        shapes, the attention shapes the model actually serves — the
+        prefill square, the ``sq=1``/``skv=max_len`` cached-decode step
+        (traced valid length, keyed as the worst case), plus the
+        windowed variants of both for sliding-window configs and int8
+        KV-cache decode keys (``lm.hot_attention_problems``) — and, for
+        configs with a conv frontend (audio family), the frontend's
+        ``ConvProblem`` shapes — today the whisper frontend is stubbed
+        (precomputed frame embeddings), so the conv warm-up is cheap
+        forward-keying for when the real frontend lands on
+        ``ops.conv2d_fused``.  ``binary_mlp`` configs additionally warm
+        their prefill and decode ``BinaryProblem`` shapes.  Only runs
+        when the model will actually take the Pallas kernel path."""
         if not (getattr(self.cfg, "use_pallas_kernels", False)
                 and jax.default_backend() == "tpu"):
             return

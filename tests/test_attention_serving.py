@@ -1,0 +1,466 @@
+"""Pallas-resident decode: KV-cache & windowed attention (PR 5).
+
+Covers the banded kernel path end to end: cached-decode / windowed
+parity against the ref oracles (traced & static windows, GQA groups,
+int8 KV with per-position scales, ``cache_index`` at 0 / mid /
+``max_len - 1``), the banded cost model against a brute-force mask
+(visited blocks == blocks with any unmasked lane), grid-work reduction
+(skipped KV blocks leave the ``pallas_call`` grid, they are not masked
+lanes), ``attention_apply`` dispatching ``ops.attention`` on every
+cache/window branch with a single ``backend="xla"`` escape hatch, the
+int8 fallback never materializing a float copy of the ``max_len``
+cache, and the v5 autotune keys.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core import autotune, cost_model, explorer
+from repro.core.dataflow import AttentionProblem, DataflowSpec, OS, WS
+from repro.core.jaxpr_utils import (
+    count_pallas_calls, count_primitive, pallas_grid_steps,
+)
+from repro.kernels import ops, ref
+from repro.models import layers
+
+D = 64
+
+
+def _arrays(rng, b, hq, hkv, sq, skv, d=D):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    return q, k, v
+
+
+def _quant(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    sc = jnp.where(amax == 0, 1.0, amax / 127.0)
+    xq = jnp.clip(jnp.round(x / sc), -127, 127).astype(jnp.int8)
+    return xq, sc
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: cached decode / windows / int8 KV.
+# ---------------------------------------------------------------------------
+CACHED_CASES = [
+    # (b, hq, hkv, sq, max_len, kv_len, window)
+    (2, 4, 2, 1, 384, 1, None),        # cache_index = 0 decode
+    (2, 4, 2, 1, 384, 200, None),      # mid-cache decode
+    (2, 4, 2, 1, 384, 384, None),      # cache_index = max_len - 1
+    (1, 8, 2, 1, 512, 100, 64),        # windowed decode, group=4
+    (1, 4, 4, 100, 512, 260, None),    # cached chunk prefill (sq > 1)
+    (1, 4, 2, 100, 512, 260, 64),      # cached chunk prefill + window
+]
+
+
+@pytest.mark.parametrize("case", CACHED_CASES)
+@pytest.mark.parametrize("anchor", ["os", "ws"])
+def test_cached_kernel_parity(case, anchor):
+    """Traced ``kv_len`` over a padded cache buffer == oracle on the
+    valid slice, for both anchors."""
+    b, hq, hkv, sq, max_len, kv_len, win = case
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    q, k, v = _arrays(rng, b, hq, hkv, sq, max_len)
+    got = ops.attention(q, k, v, causal=True, window=win,
+                        backend="interpret", anchor=anchor,
+                        kv_len=jnp.int32(kv_len))
+    want = ref.attention_ref(q, k[:, :, :kv_len], v[:, :, :kv_len],
+                             causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("anchor", ["os", "ws"])
+@pytest.mark.parametrize("kv_len", [5, 200, 384])
+def test_int8_kv_kernel_parity(anchor, kv_len):
+    """int8 K/V dequantized at the block load == oracle on the
+    dequantized valid slice (exact: same scales, f32 math)."""
+    rng = np.random.default_rng(kv_len)
+    q, k, v = _arrays(rng, 2, 4, 2, 1, 384)
+    kq, ks = _quant(k)
+    vq, vs = _quant(v)
+    got = ops.attention(q, kq, vq, causal=True, backend="interpret",
+                        anchor=anchor, kv_len=jnp.int32(kv_len),
+                        k_scale=ks, v_scale=vs)
+    want = ref.attention_ref(
+        q, (kq * ks)[:, :, :kv_len].astype(jnp.float32),
+        (vq * vs)[:, :, :kv_len].astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-3)
+    # and the quantized result approximates the fp attention
+    full = ref.attention_ref(q, k[:, :, :kv_len], v[:, :, :kv_len],
+                             causal=True)
+    assert float(jnp.max(jnp.abs(got - full))) < 0.15
+
+
+@pytest.mark.parametrize("anchor", ["os", "ws"])
+def test_traced_window_parity(anchor):
+    """A traced window (``window_dyn`` — per-layer scanned windows)
+    matches the static-window oracle, including the no-window
+    sentinel."""
+    rng = np.random.default_rng(11)
+    q, k, v = _arrays(rng, 1, 4, 2, 256, 256)
+    for w in (32, 100, 2 ** 30):
+        got = ops.attention(q, k, v, causal=True, backend="interpret",
+                            anchor=anchor, window_dyn=jnp.int32(w))
+        want = ref.attention_ref(q, k, v, causal=True,
+                                 window=None if w == 2 ** 30 else w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=2e-3, err_msg=str(w))
+
+
+@pytest.mark.parametrize("anchor", ["os", "ws"])
+def test_noncausal_window_parity(anchor):
+    """Without a causal mask a window only cuts the past — the static
+    band must NOT shrink the flash KV grid (it would silently drop
+    in-band blocks; review finding on static_band)."""
+    rng = np.random.default_rng(21)
+    q, k, v = _arrays(rng, 1, 4, 2, 512, 512)
+    got = ops.attention(q, k, v, causal=False, window=128,
+                        backend="interpret", anchor=anchor,
+                        bq=128, bkv=128)
+    want = ref.attention_ref(q, k, v, causal=False, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_bf16_kv_cache_is_not_charged_dequant_scales():
+    """A precision mismatch (f32 q over a bf16 cache) has no scale
+    arrays — only int8 KV pays the per-position scale bytes."""
+    spec = DataflowSpec.basic(OS, block=(1, 128, D))
+    f32 = AttentionProblem(bh=8, sq=1, skv=1024, d=D)
+    bf16 = dataclasses.replace(f32, kv_dtype="bfloat16")
+    i8 = dataclasses.replace(f32, kv_dtype="int8")
+    assert not bf16.kv_quantized and i8.kv_quantized
+    t_f32 = cost_model.attention_traffic(f32, spec)
+    t_bf16 = cost_model.attention_traffic(bf16, spec)
+    t_i8 = cost_model.attention_traffic(i8, spec)
+    # bf16 KV: exactly half the f32 KV stream, no phantom scale term
+    assert t_bf16.reads[WS] == t_f32.reads[WS] // 2
+    # int8 KV: quarter stream + two f32 scales per position
+    assert t_i8.reads[WS] == t_f32.reads[WS] // 4 + t_f32.reads[WS] // D
+    # VMEM: bf16 vs f32 differs only by the KV element halving (no
+    # phantom scale buffers); int8 adds exactly the two scale blocks
+    bkv = 128
+    f_f32 = cost_model.attention_vmem_footprint(f32, spec)
+    f_bf16 = cost_model.attention_vmem_footprint(bf16, spec)
+    f_i8 = cost_model.attention_vmem_footprint(i8, spec)
+    assert f_f32 - f_bf16 == 2 * 2 * bkv * D * 2
+    assert f_i8 == f_bf16 - 2 * 2 * bkv * D + 2 * 2 * bkv * 4
+
+
+def test_int8_without_scales_rejected():
+    q = jnp.zeros((1, 4, 1, D), jnp.float32)
+    k = jnp.zeros((1, 2, 128, D), jnp.int8)
+    with pytest.raises(ValueError, match="k_scale"):
+        ops.attention(q, k, k, backend="interpret")
+
+
+# ---------------------------------------------------------------------------
+# Banded cost model vs brute force.
+# ---------------------------------------------------------------------------
+def _brute_visited(p, bq, bkv):
+    """Blocks with >= 1 unmasked lane, by materializing the mask."""
+    bq, bkv = cost_model.attention_block_clamp(p.sq, p.skv, bq, bkv)
+    gq = -(-p.sq // bq)
+    gkv = -(-p.skv // bkv)
+    off = p.kv_valid - p.sq
+    qpos = np.arange(p.sq) + off
+    kpos = np.arange(gkv * bkv)
+    m = np.broadcast_to(kpos[None, :] < p.kv_valid,
+                        (p.sq, gkv * bkv)).copy()
+    if p.causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if p.window is not None:
+        m = m & (kpos[None, :] > qpos[:, None] - p.window)
+    pairs, blocks = 0, set()
+    for i in range(gq):
+        rows = m[i * bq: min((i + 1) * bq, p.sq)]
+        for j in range(gkv):
+            if rows[:, j * bkv: (j + 1) * bkv].any():
+                pairs += 1
+                blocks.add(j)
+    return pairs, len(blocks)
+
+
+BAND_PROBLEMS = [
+    AttentionProblem(bh=4, sq=256, skv=256, d=D),
+    AttentionProblem(bh=4, sq=512, skv=512, d=D, window=128),
+    AttentionProblem(bh=4, sq=100, skv=512, d=D, kv_len=260),
+    AttentionProblem(bh=4, sq=100, skv=512, d=D, kv_len=260, window=48),
+    AttentionProblem(bh=4, sq=1, skv=1024, d=D, kv_len=129),
+    AttentionProblem(bh=4, sq=1, skv=1024, d=D, kv_len=900, window=256),
+    AttentionProblem(bh=4, sq=200, skv=200, d=D, causal=False),
+    AttentionProblem(bh=4, sq=200, skv=200, d=D, causal=False, window=64),
+]
+
+
+@pytest.mark.parametrize("prob", BAND_PROBLEMS)
+@pytest.mark.parametrize("bq,bkv", [(128, 128), (128, 64), (256, 128)])
+def test_visited_blocks_match_brute_force(prob, bq, bkv):
+    """The closed-form band (shared by kernels and cost model) counts
+    exactly the blocks with at least one unmasked lane."""
+    pairs, blocks, _, _ = cost_model.attention_visited_blocks(prob, bq, bkv)
+    bpairs, bblocks = _brute_visited(prob, bq, bkv)
+    assert (pairs, blocks) == (bpairs, bblocks)
+
+
+def test_decode_traffic_scales_with_kv_len():
+    """The acceptance invariant: modeled decode traffic grows with the
+    valid KV length, not the max_len buffer, and int8 KV shrinks it."""
+    spec = DataflowSpec.basic(OS, block=(1, 128, D))
+    mk = lambda kl, kd=None: AttentionProblem(
+        bh=8, sq=1, skv=2048, d=D, group=2, kv_len=kl, kv_dtype=kd)
+    totals = [cost_model.attention_traffic(mk(kl), spec).total
+              for kl in (128, 512, 2048)]
+    assert totals[0] < totals[1] < totals[2]
+    assert 4 * totals[0] < totals[2]
+    t8 = cost_model.attention_traffic(mk(512, "int8"), spec).total
+    assert t8 < cost_model.attention_traffic(mk(512), spec).total
+    # full-length None == explicit skv
+    assert (cost_model.attention_traffic(mk(None), spec).total
+            == totals[-1])
+
+
+def test_window_sparsity_reaches_the_ranking():
+    """Banded accounting: mask sparsity no longer cancels out of the
+    OS/WS comparison — the windowed WS one-shot KV fetch stays full
+    while its per-pair state round-trips shrink with the band."""
+    full = AttentionProblem(bh=8, sq=1024, skv=1024, d=D)
+    win = dataclasses.replace(full, window=128)
+    spec_os = DataflowSpec.basic(OS, block=(128, 128, D))
+    spec_ws = DataflowSpec.basic(WS, block=(128, 128, D))
+    for prob in (full, win):
+        t_os = cost_model.attention_traffic(prob, spec_os)
+        t_ws = cost_model.attention_traffic(prob, spec_ws)
+        assert t_os.total < t_ws.total          # flash still wins
+    # the window reduces both anchors' traffic...
+    assert (cost_model.attention_traffic(win, spec_os).total
+            < cost_model.attention_traffic(full, spec_os).total)
+    # ...but by anchor-dependent amounts (the ratio moved: sparsity is
+    # no longer a common factor that cancels)
+    r_full = (cost_model.attention_traffic(full, spec_ws).total
+              / cost_model.attention_traffic(full, spec_os).total)
+    r_win = (cost_model.attention_traffic(win, spec_ws).total
+             / cost_model.attention_traffic(win, spec_os).total)
+    assert abs(r_full - r_win) > 0.1
+
+
+def test_window_aware_candidates_and_v5_keys():
+    win_prob = AttentionProblem(bh=8, sq=512, skv=512, d=D, window=48)
+    opts = explorer._attn_kv_block_options(win_prob)
+    assert 48 in opts                     # window-snapped block offered
+    dec = AttentionProblem(bh=8, sq=1, skv=2048, d=D, kv_len=100)
+    assert 104 in explorer._attn_kv_block_options(dec)  # 8-aligned kv_len
+    key = autotune._key(win_prob, cost_model.V5E, "interpret")
+    assert key.startswith("v5|attn|8|512|512|64|1|c1|w48|float32|kl-|kd-|")
+    k2 = autotune._key(dataclasses.replace(win_prob, kv_len=256),
+                       cost_model.V5E, "interpret")
+    k3 = autotune._key(dataclasses.replace(win_prob, kv_dtype="int8"),
+                       cost_model.V5E, "interpret")
+    assert len({key, k2, k3}) == 3        # new fields are keyed
+    with pytest.raises(ValueError, match="kv_len"):
+        AttentionProblem(bh=8, sq=1, skv=128, d=D, kv_len=256)
+
+
+# ---------------------------------------------------------------------------
+# Grid work: skipped KV blocks leave the lowering.
+# ---------------------------------------------------------------------------
+def test_static_window_shrinks_flash_grid():
+    """A static window must shrink the pallas grid itself (trace-visible
+    dispatch work), not just mask lanes in-kernel."""
+    rng = np.random.default_rng(0)
+    q, k, v = _arrays(rng, 1, 4, 2, 1024, 1024)
+
+    def steps(win):
+        jx = jax.make_jaxpr(
+            lambda q, k, v: ops.attention(
+                q, k, v, causal=True, window=win, backend="interpret",
+                anchor="os", bq=128, bkv=128))(q, k, v)
+        return pallas_grid_steps(jx.jaxpr), count_pallas_calls(jx.jaxpr)
+
+    s_full, c_full = steps(None)
+    s_win, c_win = steps(128)
+    assert c_full == c_win == 1
+    assert s_win < s_full
+    # decode against a long cache: the window bounds the band statically
+    qd, kd, vd = _arrays(rng, 1, 4, 2, 1, 4096)
+    jx = jax.make_jaxpr(
+        lambda q, k, v: ops.attention(
+            q, k, v, causal=True, window=256, backend="interpret",
+            anchor="os", bq=1, bkv=128, kv_len=jnp.int32(100)))(qd, kd, vd)
+    assert pallas_grid_steps(jx.jaxpr) < 4 * 32   # << the 4*32 full sweep
+    assert count_primitive(jx.jaxpr, "pad") == 0  # decode fast path kept
+
+
+def test_ws_compiled_loop_skips_out_of_band_blocks():
+    """The compiled WS per-block loop drops statically-invisible KV
+    blocks — fewer ``pallas_call`` dispatches, zero work."""
+    rng = np.random.default_rng(1)
+    q, k, v = _arrays(rng, 1, 4, 2, 64, 512)
+
+    def calls(win):
+        jx = jax.make_jaxpr(
+            lambda q, k, v: ops.attention(
+                q, k, v, causal=True, window=win, backend="pallas",
+                anchor="ws", bq=64, bkv=128))(q, k, v)
+        return count_pallas_calls(jx.jaxpr)
+
+    assert calls(None) == 4
+    assert calls(64) < 4
+
+
+# ---------------------------------------------------------------------------
+# attention_apply: every branch on the kernel path, one escape hatch.
+# ---------------------------------------------------------------------------
+def _attn_setup(kv_dtype="auto", attn_window=None, qk_norm=False):
+    cfg = configs.get_smoke("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype,
+                              attn_window=attn_window, qk_norm=qk_norm)
+    p = layers.init_attention(jax.random.PRNGKey(0), cfg)
+    return cfg, p
+
+
+def _mk_cache(cfg, b, max_len, int8=False):
+    shape = (b, cfg.n_kv_heads, max_len, cfg.d_head)
+    if int8:
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.ones(shape[:-1] + (1,), jnp.float32),
+                jnp.ones(shape[:-1] + (1,), jnp.float32))
+    return (jnp.zeros(shape, jnp.bfloat16), jnp.zeros(shape, jnp.bfloat16))
+
+
+APPLY_CASES = [
+    # (int8, window, s, cache_index, max_len)
+    (False, None, 1, 0, 64),        # decode at cache_index = 0
+    (False, None, 1, 31, 64),       # mid-cache decode
+    (False, None, 1, 63, 64),       # cache_index = max_len - 1
+    (False, 24, 1, 40, 64),         # windowed decode (static window)
+    (True, None, 1, 40, 64),        # int8 KV decode
+    (True, 24, 1, 63, 64),          # int8 + windowed, last slot
+    (False, None, 8, 16, 64),       # cached multi-token chunk
+]
+
+
+@pytest.mark.parametrize("case", APPLY_CASES)
+def test_attention_apply_kernel_vs_escape_hatch(case):
+    """The Pallas route of attention_apply agrees with the XLA escape
+    hatch on every cache/window/int8 branch (two independent
+    implementations of the same masked semantics)."""
+    int8, win, s, idx, max_len = case
+    cfg, p = _attn_setup(kv_dtype="int8" if int8 else "auto")
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    b = 2
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    cache = _mk_cache(cfg, b, max_len, int8=int8)
+    # pre-fill the cache with idx entries so the decode attends history
+    if idx:
+        hist = jnp.asarray(rng.normal(size=(b, idx, cfg.d_model)) * 0.3,
+                           jnp.float32)
+        _, cache = layers.attention_apply(
+            p, hist, cfg, positions=jnp.arange(idx)[None, :],
+            kv_cache=cache, cache_index=jnp.int32(0), backend="xla")
+    pos = (idx + jnp.arange(s))[None, :]
+    kw = dict(positions=pos, window=win, kv_cache=cache,
+              cache_index=jnp.int32(idx))
+    out_k, cache_k = layers.attention_apply(p, x, cfg, backend="interpret",
+                                            **kw)
+    out_x, cache_x = layers.attention_apply(p, x, cfg, backend="xla", **kw)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                               rtol=2e-2, atol=2e-3)
+    for got, want in zip(cache_k, cache_x):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32))
+
+
+def test_attention_apply_traced_window_matches_static():
+    cfg, p = _attn_setup()
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1, 32, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    stat, _ = layers.attention_apply(p, x, cfg, window=8,
+                                     backend="interpret")
+    dyn, _ = layers.attention_apply(p, x, cfg, window=jnp.int32(8),
+                                    backend="interpret")
+    np.testing.assert_allclose(np.asarray(stat), np.asarray(dyn),
+                               rtol=1e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("int8,win", [(False, None), (True, None),
+                                      (False, 24), (True, 24)])
+def test_attention_apply_cache_branches_dispatch_pallas(int8, win):
+    """The acceptance claim: a KV cache and/or window still dispatches
+    ONE ``ops.attention`` kernel (previously these branches fell back
+    to masked einsums)."""
+    cfg, p = _attn_setup(kv_dtype="int8" if int8 else "auto")
+    b, s, max_len = 1, 1, 64
+    x = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+    cache = _mk_cache(cfg, b, max_len, int8=int8)
+
+    def run(x, cache_index, *cache):
+        out, _ = layers.attention_apply(
+            p, x, cfg, positions=jnp.full((b, 1), cache_index),
+            window=win, kv_cache=cache, cache_index=cache_index,
+            backend="interpret")
+        return out
+
+    jx = jax.make_jaxpr(run)(x, jnp.int32(3), *cache)
+    assert count_pallas_calls(jx.jaxpr) == 1
+
+
+def test_int8_fallback_never_materializes_float_cache():
+    """Satellite: the XLA escape hatch folds the int8 dequant into the
+    logits/probabilities — no eqn may produce a float image of the
+    whole (B, Hkv, max_len, Dh) cache (the old path multiplied the
+    full buffer by its scales every decode step)."""
+    cfg, p = _attn_setup(kv_dtype="int8")
+    b, max_len = 2, 128
+    x = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+    cache = _mk_cache(cfg, b, max_len, int8=True)
+    cache_shape = (b, cfg.n_kv_heads, max_len, cfg.d_head)
+
+    def run(x, cache_index, *cache):
+        out, _ = layers.attention_apply(
+            p, x, cfg, positions=jnp.full((b, 1), cache_index),
+            kv_cache=cache, cache_index=cache_index, backend="xla")
+        return out
+
+    jx = jax.make_jaxpr(run)(x, jnp.int32(100), *cache)
+
+    def visit(eqn):
+        bad = 0
+        if eqn.primitive.name in ("mul", "div", "add", "sub"):
+            for v_ in eqn.outvars:
+                aval = v_.aval
+                if (getattr(aval, "shape", None) == cache_shape
+                        and aval.dtype in (jnp.float32, jnp.bfloat16)):
+                    bad += 1
+        return bad
+
+    from repro.core.jaxpr_utils import _walk
+    assert _walk(jx.jaxpr, visit) == 0
+
+
+def test_hot_attention_problems_windowed_and_int8():
+    """Engine warming covers the windowed-prefill and int8 cached-decode
+    shapes the model actually serves."""
+    from repro.models import lm
+
+    base = configs.get_smoke("qwen3-1.7b")
+    cfg = dataclasses.replace(base, attn_window=64, kv_cache_dtype="int8")
+    probs = lm.hot_attention_problems(cfg, 2, 128, max_len=256)
+    assert len(probs) == 4
+    wins = {p.window for p in probs}
+    assert wins == {None, 64}
+    decode = [p for p in probs if p.sq == 1]
+    assert all(p.skv == 256 and p.kv_dtype == "int8" for p in decode)
+    prefill = [p for p in probs if p.sq > 1]
+    assert all(p.kv_dtype is None for p in prefill)   # attend_local
+    for prob in probs:
+        explorer.best_spec(prob)     # every warmed problem resolves
