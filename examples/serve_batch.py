@@ -4,7 +4,16 @@
 
 The paper is an inference paper, so the end-to-end example is serving:
 batched prompts -> prefill -> greedy decode through the KV-cached
-serve_step (the same function the decode_32k dry-run cells lower).
+serve_step (the same function the decode_32k dry-run cells lower), now
+via the request lifecycle (submit -> serve) so the run ends with the
+engine's admission/degradation stats and health ledger.  Try a fault
+drill:
+
+    REPRO_FAULT_PLAN="serve.decode_step:3:raise" \
+        PYTHONPATH=src python examples/serve_batch.py
+
+and watch the demotion + retry land in the report (see
+docs/robustness.md).
 """
 import argparse
 import time
@@ -36,14 +45,20 @@ def main() -> None:
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()
-    out = engine.generate(prompts, args.new_tokens)
+    reqs = [engine.submit(p, args.new_tokens) for p in prompts]
+    engine.serve(reqs)
     dt = time.time() - t0
-    total_new = out.size
+    total_new = sum(len(r.out_tokens) for r in reqs)
     print(f"batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens}: {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s incl. prefill+compile)")
-    for i, row in enumerate(out):
-        print(f"  req{i}: {row[:12].tolist()}...")
+    for r in reqs:
+        print(f"  req{r.rid} [{r.state.value}]: "
+              f"{r.out_tokens[:12]}...")
+    stats = engine.stats()
+    health = stats.pop("health")
+    print(f"engine stats: {stats}")
+    print(f"health: {health}")
 
 
 if __name__ == "__main__":

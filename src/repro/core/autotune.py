@@ -37,6 +37,17 @@ or kernel lowering changes materially) orphans every stale entry;
 deleting the file forces a full re-tune.  Disk I/O is best-effort — a
 read-only filesystem degrades to the in-process cache.
 
+Corruption recovery: a cache file that fails to parse is *quarantined*
+(renamed to ``autotune.json.corrupt-<n>``) so the evidence survives for
+a post-mortem instead of being silently ignored or — worse — crashing
+serving.  Within a parseable file every entry is validated
+independently: each carries a CRC32 checksum of its spec payload, and
+a malformed or checksum-mismatched entry is skipped (counted in
+``stats()['entries_skipped']``) while the good entries load normally.
+Saves are atomic (temp file + ``os.replace``) so a mid-write kill can
+never leave a torn store — the ``autotune.save`` fault-injection site
+drills exactly that (see runtime/health.py).
+
 ``CACHE_VERSION`` history: 1 = GEMM-only keys (PR 1); 2 = conv keys
 added alongside the single-dispatch conv lowering (PR 2) — the conv
 kernel change shifts realized traffic, so v1 entries are orphaned;
@@ -64,6 +75,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zlib
 from typing import Any, Dict, Iterable, List, Optional
 
 from repro.core import cost_model, explorer
@@ -89,6 +101,11 @@ _stats = {
     "hits": 0,          # served from memory or disk
     "misses": 0,        # required an enumeration
     "enumerations": 0,  # explorer.explore invocations (incl. refinement)
+    "entries_loaded": 0,        # disk entries accepted by validation
+    "entries_skipped": 0,       # malformed / checksum-failed entries
+    "files_quarantined": 0,     # unparseable stores moved aside
+    "load_errors": 0,           # I/O or injected faults during load
+    "save_errors": 0,           # I/O or injected faults during save
 }
 
 
@@ -130,34 +147,126 @@ def _spec_from_json(d: dict) -> DataflowSpec:
     )
 
 
+def _checksum(spec_json: dict) -> int:
+    """CRC32 of the canonical JSON encoding of a spec payload."""
+    blob = json.dumps(spec_json, sort_keys=True,
+                      separators=(",", ":")).encode()
+    return zlib.crc32(blob) & 0xFFFFFFFF
+
+
+def _entry_to_json(spec: DataflowSpec) -> dict:
+    payload = _spec_to_json(spec)
+    return {"spec": payload, "sum": _checksum(payload)}
+
+
+def _entry_from_json(entry: dict) -> Optional[DataflowSpec]:
+    """Validate ONE disk entry; None means skip (never raise).
+
+    Accepts only the checksummed ``{"spec": ..., "sum": ...}`` envelope
+    whose CRC matches; anything else — a truncated object, a bit-flipped
+    payload, a pre-checksum legacy entry — is rejected individually so
+    one bad record cannot poison its neighbors.
+    """
+    if not isinstance(entry, dict):
+        return None
+    payload = entry.get("spec")
+    if not isinstance(payload, dict) or "sum" not in entry:
+        return None
+    try:
+        if int(entry["sum"]) != _checksum(payload):
+            return None
+        return _spec_from_json(payload)
+    except (KeyError, ValueError, TypeError):
+        return None
+
+
+def _quarantine(path: str) -> Optional[str]:
+    """Move an unreadable cache file to ``<path>.corrupt-<n>``.
+
+    Keeps the evidence for debugging and guarantees the next save starts
+    from a clean slate; returns the quarantine path (None if the rename
+    itself failed, e.g. on a read-only filesystem)."""
+    for n in range(100):
+        target = f"{path}.corrupt-{n}"
+        if not os.path.exists(target):
+            break
+    else:
+        target = f"{path}.corrupt-overflow"
+    try:
+        os.replace(path, target)
+    except OSError:
+        return None
+    _stats["files_quarantined"] += 1
+    return target
+
+
 def _load_disk() -> None:
+    """Best-effort disk load with per-entry validation.
+
+    Failure containment, from coarse to fine: an I/O error or injected
+    ``autotune.load`` fault degrades to the in-process cache (counted,
+    never raised past here); an unparseable file is quarantined to
+    ``autotune.json.corrupt-<n>``; a parseable file with some malformed
+    or checksum-failed entries keeps every good entry and counts the
+    skips in ``stats()``.  A version mismatch is not corruption — the
+    orphaned store is left in place and simply ignored.
+    """
+    from repro.runtime import health
+
     global _disk_loaded
     if _disk_loaded:
         return
     _disk_loaded = True
+    path = cache_path()
     try:
-        with open(cache_path()) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
+        health.maybe_inject("autotune.load")
+        with open(path) as f:
+            raw = f.read()
+    except FileNotFoundError:
+        return
+    except (OSError, health.SimulatedFailure):
+        _stats["load_errors"] += 1
+        return
+    try:
+        data = json.loads(raw)
+        if not isinstance(data, dict):
+            raise ValueError("cache root is not an object")
+    except ValueError:
+        _quarantine(path)
         return
     if data.get("version") != CACHE_VERSION:
         return
-    for key, entry in data.get("entries", {}).items():
-        if key not in _memory:
-            try:
-                _memory[key] = _spec_from_json(entry)
-            except (KeyError, ValueError, TypeError):
-                continue
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        _quarantine(path)
+        return
+    for key, entry in entries.items():
+        if key in _memory:
+            continue
+        spec = _entry_from_json(entry)
+        if spec is None:
+            _stats["entries_skipped"] += 1
+            continue
+        _memory[key] = spec
+        _stats["entries_loaded"] += 1
 
 
 def _save_disk() -> None:
-    """Atomic, best-effort rewrite of the whole store."""
+    """Atomic, best-effort rewrite of the whole store.
+
+    The payload is fully serialized into a temp file in the target
+    directory and moved into place with ``os.replace``, so a reader can
+    never observe a torn store and a mid-write kill (drilled via the
+    ``autotune.save`` fault site) leaves the previous file intact.
+    """
+    from repro.runtime import health
+
     path = cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         payload = {
             "version": CACHE_VERSION,
-            "entries": {k: _spec_to_json(s) for k, s in _memory.items()},
+            "entries": {k: _entry_to_json(s) for k, s in _memory.items()},
         }
         fd, tmp = tempfile.mkstemp(
             dir=os.path.dirname(path), suffix=".tmp"
@@ -165,12 +274,15 @@ def _save_disk() -> None:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f, indent=1, sort_keys=True)
+                # the injected mid-write kill lands here: after bytes hit
+                # the temp file but before the atomic rename
+                health.maybe_inject("autotune.save")
             os.replace(tmp, path)
         except BaseException:
             os.unlink(tmp)
             raise
-    except OSError:
-        pass
+    except (OSError, health.SimulatedFailure):
+        _stats["save_errors"] += 1
 
 
 def refine_enabled() -> bool:

@@ -11,6 +11,16 @@ epilogue (dequant scale, bias, activation, residual) — in one kernel
 dispatch: the epilogue is applied in-register before the single HBM
 output write instead of as separate XLA ops re-reading the raw
 accumulator from HBM.
+
+Fault injection (runtime/health.py): each public op carries a named
+site — ``kernel.matmul`` / ``kernel.conv2d`` / ``kernel.binary_matmul``
+/ ``kernel.attention`` — checked at dispatch.  Since these wrappers are
+jitted, an armed fault fires at trace/lowering time (once per distinct
+compiled shape), which is where real lowering and interpret failures
+surface; a ``nan``-kind fault bakes a NaN multiply into the trace for
+float outputs (integer outputs ignore it — there is no int NaN), so
+the non-finite sentinel downstream sees exactly what a numerically
+broken kernel would produce.
 """
 from __future__ import annotations
 
@@ -30,6 +40,19 @@ from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _inject(site: str) -> Optional[str]:
+    from repro.runtime import health
+
+    return health.maybe_inject(site)
+
+
+def _poison(out: jax.Array, fault: Optional[str]) -> jax.Array:
+    """Realize a ``nan``-kind injected fault on a float result."""
+    if fault == "nan" and jnp.issubdtype(out.dtype, jnp.floating):
+        return out * jnp.asarray(jnp.nan, out.dtype)
+    return out
 
 
 def _pad_to(x: jax.Array, mults, value=0):
@@ -125,11 +148,12 @@ def matmul(
     distinct (shape, dtype, hardware, backend) and memoized in-process
     and on disk.
     """
+    fault = _inject("kernel.matmul")
     m, k = a.shape
     n = b.shape[1]
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
-        return ref.matmul_ref(a, b, out_dtype)
+        return _poison(ref.matmul_ref(a, b, out_dtype), fault)
     if spec is None:
         spec = autotune.best_spec(
             _gemm_problem(m, k, n, a.dtype, out_dtype), backend=backend
@@ -141,7 +165,7 @@ def matmul(
                             min(bn, bp.shape[1])))
     out = matmul_df.matmul_df(ap, bp, spec, out_dtype=out_dtype,
                               interpret=backend == "interpret")
-    return out[:m, :n]
+    return _poison(out[:m, :n], fault)
 
 
 @functools.partial(
@@ -169,13 +193,14 @@ def conv2d(
     explicitly-passed ``spec`` keeps the ``b_oh``/``bc``/``bk`` keyword
     blocking (its ``block`` field is GEMM-shaped).
     """
+    fault = _inject("kernel.conv2d")
     n, ih, iw, cin = x.shape
     fh, fw, _, cout = w.shape
     oh = (ih - fh) // stride + 1
     ow = (iw - fw) // stride + 1
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
-        return ref.conv2d_ref(x, w, stride, out_dtype)
+        return _poison(ref.conv2d_ref(x, w, stride, out_dtype), fault)
     if spec is None:
         try:
             spec = autotune.best_spec(
@@ -196,7 +221,7 @@ def conv2d(
         xp, wp, stride, spec, oh=oh_pad, ow=ow, b_oh=b_oh_, bc=bc_, bk=bk_,
         out_dtype=out_dtype, interpret=backend == "interpret",
     )
-    return out[:, :oh, :, :cout]
+    return _poison(out[:, :oh, :, :cout], fault)
 
 
 @functools.partial(
@@ -226,6 +251,7 @@ def conv2d_fused(
     round-trips HBM.  Shapes pad automatically like ``conv2d``; epilogue
     math is float32 and the default output dtype is float32.
     """
+    fault = _inject("kernel.conv2d")
     n, ih, iw, cin = x.shape
     fh, fw, _, cout = w.shape
     oh = (ih - fh) // stride + 1
@@ -245,10 +271,10 @@ def conv2d_fused(
                 f"got {scale.shape}"
             )
     if backend == "xla":
-        return ref.conv2d_fused_ref(
+        return _poison(ref.conv2d_fused_ref(
             x, w, stride, bias=bias, scale=scale, residual=residual,
             activation=activation, out_dtype=out_dtype,
-        )
+        ), fault)
     epi = Epilogue(
         bias=bias is not None,
         activation=activation,
@@ -283,7 +309,7 @@ def conv2d_fused(
         interpret=backend == "interpret",
         epilogue=epi, scale=scale, bias=bias, residual=residual,
     )
-    return out[:, :oh, :, :cout]
+    return _poison(out[:, :oh, :, :cout], fault)
 
 
 @functools.partial(
@@ -381,6 +407,7 @@ def attention(
     neither padded nor blocked (``bq = 1``, one q tile), keeping the
     per-step cost at one kernel dispatch over the KV stream.
     """
+    fault = _inject("kernel.attention")
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     group = group or hq // hkv
@@ -390,9 +417,10 @@ def attention(
         raise ValueError("int8 K/V need per-position k_scale/v_scale")
     win_eff = window if window is not None else window_dyn
     if backend == "xla":
-        return ref.attention_ref(q, k, v, causal=causal, window=win_eff,
-                                 scale=scale, kv_len=kv_len,
-                                 k_scale=k_scale, v_scale=v_scale)
+        return _poison(
+            ref.attention_ref(q, k, v, causal=causal, window=win_eff,
+                              scale=scale, kv_len=kv_len,
+                              k_scale=k_scale, v_scale=v_scale), fault)
     if spec is None and (anchor is None or bq is None or bkv is None):
         spec = autotune.best_spec(
             _attention_problem(b * hq, sq, skv, d, group, causal, window,
@@ -430,7 +458,7 @@ def attention(
         interpret=backend == "interpret",
         kv_len=kv_len, window_dyn=window_dyn, k_scale=ksp, v_scale=vsp,
     )
-    return out[:, :sq].reshape(b, hq, sq, d)
+    return _poison(out[:, :sq].reshape(b, hq, sq, d), fault)
 
 
 def _binary_problem(m: int, kp: int, n: int, n_bits: int,
@@ -454,9 +482,11 @@ def binary_matmul(
     and drop out of the popcount, so the ``K - 2*popcount`` identity
     absorbs the tile padding with no post-correction.
     """
+    fault = _inject("kernel.binary_matmul")
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
-        return ref.binary_matmul_ref(a_packed, b_packed, n_bits)
+        return _poison(ref.binary_matmul_ref(a_packed, b_packed, n_bits),
+                       fault)
     m, kp = a_packed.shape
     n = b_packed.shape[1]
     if spec is None:
@@ -472,7 +502,7 @@ def binary_matmul(
         ap, bp, n_bits, spec, out_dtype=jnp.int32,
         interpret=backend == "interpret",
     )
-    return out[:m, :n]
+    return _poison(out[:m, :n], fault)
 
 
 @functools.partial(
@@ -498,6 +528,7 @@ def binary_matmul_fused(
     accumulator never round-trips HBM.  Output dtype defaults to int8
     (+-1) when ``binarize`` else float32.
     """
+    fault = _inject("kernel.binary_matmul")
     m, kp = a_packed.shape
     n = b_packed.shape[1]
     if scale is not None:
@@ -515,10 +546,10 @@ def binary_matmul_fused(
         bias = jnp.asarray(bias, jnp.float32).reshape(1, n)
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
-        return ref.binary_matmul_fused_ref(
+        return _poison(ref.binary_matmul_fused_ref(
             a_packed, b_packed, n_bits, scale=scale, bias=bias,
             residual=residual, binarize=binarize, out_dtype=out_dtype,
-        )
+        ), fault)
     epi = BinaryEpilogue(
         scale=scale is not None, bias=bias is not None,
         residual=residual is not None, binarize=binarize,
@@ -544,7 +575,7 @@ def binary_matmul_fused(
         interpret=backend == "interpret",
         epilogue=epi, scale=scale, bias=bias, residual=residual,
     )
-    return out[:m, :n]
+    return _poison(out[:m, :n], fault)
 
 
 @functools.partial(
@@ -647,6 +678,7 @@ def matmul_fused(
     M == N an explicit 2-D shape disambiguates; a 1-D vector defaults to
     per-column.
     """
+    fault = _inject("kernel.matmul")
     m, k = a.shape
     n = b.shape[1]
     backend = backend or ("pallas" if _on_tpu() else "xla")
@@ -670,10 +702,10 @@ def matmul_fused(
                 f"(M={m}, 1), got {scale.shape}"
             )
     if backend == "xla":
-        return ref.matmul_fused_ref(
+        return _poison(ref.matmul_fused_ref(
             a, b, bias=bias, scale=scale, residual=residual,
             activation=activation, out_dtype=out_dtype,
-        )
+        ), fault)
     epi = Epilogue(
         bias=bias is not None,
         activation=activation,
@@ -704,7 +736,7 @@ def matmul_fused(
         interpret=backend == "interpret",
         epilogue=epi, scale=scale, bias=bias, residual=residual,
     )
-    return out[:m, :n]
+    return _poison(out[:m, :n], fault)
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "spec", "backend"))

@@ -39,6 +39,11 @@ def main() -> None:
     print(f"generated {out.shape} tokens:")
     for row in out:
         print("  ", row.tolist())
+    stats = engine.stats()
+    print(f"engine: admitted={stats['admitted']} "
+          f"completed={stats['completed']} retries={stats['retries']} "
+          f"demotions={stats['demotions']} "
+          f"degraded_steps={stats['degraded_steps']}")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,22 @@ Every layer is an ``init_*(key, ...) -> params`` plus a pure apply
 function.  The attention apply dispatches between the plain XLA oracle,
 a chunked online-softmax path (memory-safe for 32k+ contexts), and the
 Pallas flash kernel (on TPU runtimes).
+
+Graceful degradation: every kernel dispatch site in this module
+(``attention_apply``, ``mlp_apply``, ``binary_dense``) consults a
+process-wide *backend override* before resolving its backend.  The
+serving engine's ``DegradationPolicy`` (runtime/health.py) traces its
+degraded step functions under ``forced_backend("xla")``, which pins
+every site onto the existing XLA escape hatches (``_attention_xla``,
+the einsum MLP, the binary reference path) without threading a backend
+argument through the model scan.  The same sites carry named
+fault-injection points (``layers.attention`` / ``layers.mlp`` /
+``kernel.binary_matmul`` via ops) so a drill can fail any one dispatch
+and watch the stack degrade instead of crash.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -16,6 +29,30 @@ import jax.numpy as jnp
 from repro.models import flags
 
 Params = Dict[str, jax.Array]
+
+# Process-wide kernel-backend override ("xla" pins every dispatch site
+# onto its escape hatch; None = per-site resolution).  Consulted at
+# trace time, so a jitted function built under ``forced_backend`` bakes
+# the override into its trace.
+_BACKEND_OVERRIDE: Optional[str] = None
+
+
+@contextlib.contextmanager
+def forced_backend(backend: Optional[str]):
+    """Pin every kernel dispatch site in this module to ``backend``
+    for the duration (used by the serving engine's degraded step
+    functions; active during tracing is sufficient)."""
+    global _BACKEND_OVERRIDE
+    prev = _BACKEND_OVERRIDE
+    _BACKEND_OVERRIDE = backend
+    try:
+        yield
+    finally:
+        _BACKEND_OVERRIDE = prev
+
+
+def backend_override() -> Optional[str]:
+    return _BACKEND_OVERRIDE
 
 
 def _dtype(name: str):
@@ -299,6 +336,9 @@ def attention_apply(
     projected K/V (prefill-from-zero: identical math, and it keeps the
     attended KV length at ``S`` instead of the padded cache buffer).
     """
+    from repro.runtime import health
+
+    fault = health.maybe_inject("layers.attention")
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, dh)
@@ -347,8 +387,9 @@ def attention_apply(
             kv_len = cache_index + s     # traced valid length
     scale = dh ** -0.5
     if backend is None:
-        backend = ("pallas" if cfg.use_pallas_kernels
-                   and jax.default_backend() == "tpu" else "xla")
+        backend = _BACKEND_OVERRIDE or (
+            "pallas" if cfg.use_pallas_kernels
+            and jax.default_backend() == "tpu" else "xla")
     if backend == "xla":
         out = _attention_xla(
             q, k_att, v_att, scale, window=window, kv_len=kv_len,
@@ -366,6 +407,8 @@ def attention_apply(
             kv_len=kv_len, k_scale=k_sc, v_scale=v_sc, backend=backend,
         )
 
+    if fault == "nan":
+        out = out * jnp.asarray(jnp.nan, out.dtype)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache
 
@@ -447,6 +490,8 @@ def binary_dense(
     """
     from repro.kernels import ops as kops, ref as kref
 
+    if backend is None:
+        backend = _BACKEND_OVERRIDE
     d_in = x.shape[-1]
     lead = x.shape[:-1]
     xp = kref.pack_binary(x.reshape(-1, d_in), axis=1)
@@ -479,13 +524,21 @@ def mlp_apply(p: Params, x: jax.Array, cfg=None) -> jax.Array:
     gate's silu is fused into its GEMM's output write).  Binary-MLP
     params (``cfg.binary_mlp`` -> ``init_binary_mlp``) are dispatched on
     their keys to the xnor-popcount path."""
+    from repro.runtime import health
+
+    fault = health.maybe_inject("layers.mlp")
     if "up" in p:   # binary MLP params (lm._init_layer under binary_mlp)
-        return binary_mlp_apply(p, x).astype(x.dtype)
-    if (cfg is not None and getattr(cfg, "use_pallas_kernels", False)
-            and jax.default_backend() == "tpu"):
+        out = binary_mlp_apply(p, x).astype(x.dtype)
+    elif (cfg is not None and getattr(cfg, "use_pallas_kernels", False)
+            and jax.default_backend() == "tpu"
+            and _BACKEND_OVERRIDE is None):
         gate = fused_dense(x, p["w1"], activation="silu")
         up = fused_dense(x, p["w3"])
-        return fused_dense((gate * up).astype(x.dtype), p["w2"])
-    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w1"]))
-    up = jnp.einsum("...d,df->...f", x, p["w3"])
-    return jnp.einsum("...f,fd->...d", gate * up, p["w2"])
+        out = fused_dense((gate * up).astype(x.dtype), p["w2"])
+    else:
+        gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w1"]))
+        up = jnp.einsum("...d,df->...f", x, p["w3"])
+        out = jnp.einsum("...f,fd->...d", gate * up, p["w2"])
+    if fault == "nan":
+        out = out * jnp.asarray(jnp.nan, out.dtype)
+    return out

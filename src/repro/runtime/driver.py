@@ -107,9 +107,21 @@ class TrainDriver:
             if (step + 1) % self.job.ckpt_every == 0 \
                     or step + 1 == self.job.steps:
                 self.save(state)
-            health.maybe_inject_failure(step + 1)
+            try:
+                health.maybe_inject_failure(step + 1)
+            except health.SimulatedFailure as e:
+                # Ledger the crash, then let it propagate: the whole
+                # point of the drill is exercising checkpoint-restart
+                # (run(resume=True) continues bit-exactly).
+                self.monitor.note("fault", site="train.step",
+                                  step=step + 1, detail=str(e))
+                raise
         self.ckpt.wait()
         return state
+
+    def health_report(self) -> Dict[str, object]:
+        """Step timing + ledger rollup for this driver's monitor."""
+        return self.monitor.report()
 
     # ------------------------------------------------------------------
     def save(self, state: TrainState, blocking: bool = False) -> None:

@@ -1,20 +1,52 @@
-"""Serving engine: batched prefill + decode with KV/SSM caches.
+"""Serving engine: batched prefill + decode with a request lifecycle.
 
 ``make_serve_step`` builds the one-token decode function the dry-run
-lowers for the decode_32k / long_500k cells; ``Engine`` is the example
-driver that batches requests, prefills, and streams tokens.
+lowers for the decode_32k / long_500k cells; ``Engine`` batches
+requests, prefills, and streams tokens — now behind a fault-tolerant
+request lifecycle:
+
+    QUEUED -> PREFILLING -> DECODING -> {DONE, FAILED, EVICTED}
+
+``submit`` is the admission gate: it validates prompts (empty, over
+``max_len``, non-integer dtype -> ``ValueError``) and rejects requests
+whose decode-step attention footprint cannot fit the hardware's VMEM
+under *any* dataflow the explorer can enumerate (``AdmissionError``).
+``serve`` drives admitted requests through prefill and the decode loop;
+every step runs under ``_execute``:
+
+  * the ``serve.prefill`` / ``serve.decode_step`` fault-injection sites
+    (``runtime.health.maybe_inject``) fire here, so drills exercise the
+    exact retry path real failures take;
+  * a non-finite sentinel checks the step's logits on the host — a NaN
+    or Inf (bad kernel output, injected ``nan`` fault) counts as a step
+    failure just like a raised lowering error;
+  * on failure the ``DegradationPolicy`` demotes to the ``backend=
+    "xla"`` escape hatch (``layers.forced_backend``) and the step is
+    retried with exponential backoff against the *pre-step* cache —
+    JAX's functional caches make commit-after-validate free, so a
+    poisoned step never contaminates later tokens;
+  * after ``cooldown_steps`` the policy re-probes the primary path.
+
+Per-request deadlines evict slow requests (EVICTED) instead of stalling
+the batch; ``max_new_tokens`` budgets are clamped to the cache capacity
+(``max_len``).  ``stats()`` reports admission/backpressure counters next
+to the ``HealthMonitor`` ledger, so demotions, retries, stragglers and
+injected faults surface in one place.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import enum
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune
-from repro.models import lm
+from repro.core import autotune, cost_model, explorer
+from repro.models import layers, lm
+from repro.runtime import health
 
 
 def make_serve_step(cfg, dist: Optional[lm.Dist] = None,
@@ -39,33 +71,215 @@ def make_prefill_fn(cfg, dist: Optional[lm.Dist] = None) -> Callable:
     return prefill_fn
 
 
+class RequestState(str, enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+    FAILED = "failed"
+    EVICTED = "evicted"
+
+
+class AdmissionError(ValueError):
+    """Request rejected at admission (resource infeasibility)."""
+
+
+class StepFailed(RuntimeError):
+    """A prefill/decode step failed on both kernel paths, retries
+    exhausted — the requests it was serving transition to FAILED."""
+
+
+class NonFiniteLogits(RuntimeError):
+    """The post-step sentinel saw NaN/Inf logits."""
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int
+    deadline_s: Optional[float] = None   # wall-clock budget from serve start
+    rid: int = -1
+    state: RequestState = RequestState.QUEUED
     out_tokens: List[int] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+    degraded_steps: int = 0       # decode steps served on the XLA path
 
 
 class Engine:
-    """Minimal batched serving loop (greedy decoding).
+    """Batched serving loop with admission, degradation and retries.
 
     Batches requests of equal prompt length (uniform-position cache),
     prefills once, then steps the decode function; used by
-    examples/serve_batch.py.
+    examples/serve_batch.py.  ``generate`` keeps the original
+    prompts-in/tokens-out contract on top of ``submit`` + ``serve``.
+
+    ``hw`` is the admission-control hardware model (VMEM feasibility of
+    the decode-step attention); tests pass a tiny ``HardwareSpec`` to
+    force rejections.  ``policy``/``monitor`` own degradation state and
+    the health ledger; callers may share one monitor across engines.
     """
 
     def __init__(self, cfg, params, max_len: int = 2048,
-                 dist: Optional[lm.Dist] = None):
+                 dist: Optional[lm.Dist] = None,
+                 monitor: Optional[health.HealthMonitor] = None,
+                 policy: Optional[health.DegradationPolicy] = None,
+                 hw: cost_model.HardwareSpec = cost_model.V5E,
+                 validate_outputs: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.dist = dist
+        self.hw = hw
+        self.validate_outputs = validate_outputs
+        self.monitor = monitor if monitor is not None else health.HealthMonitor()
+        self.policy = policy if policy is not None else health.DegradationPolicy()
         self._decode = jax.jit(make_serve_step(cfg, dist))
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, max_len=max_len, dist=dist)
         )
-        self._warmed = set()
 
+        # Degraded twins: same computation forced through the XLA escape
+        # hatch.  The context manager must be live while the function
+        # body *traces*, so it wraps the body inside the jitted callee
+        # rather than the jit() call.
+        def _decode_xla(params, cache, tokens):
+            with layers.forced_backend("xla"):
+                return lm.decode_step(params, cache, tokens, cfg, dist=dist)
+
+        def _prefill_xla(params, tokens):
+            with layers.forced_backend("xla"):
+                return lm.prefill(params, tokens, cfg, max_len=max_len,
+                                  dist=dist)
+
+        self._decode_degraded = jax.jit(_decode_xla)
+        self._prefill_degraded = jax.jit(_prefill_xla)
+        self._warmed = set()
+        self._next_rid = 0
+        self._admission_cache: Dict[int, bool] = {}   # seq len -> feasible
+        self._counters: Dict[str, int] = {
+            "submitted": 0, "admitted": 0, "rejected": 0,
+            "completed": 0, "failed": 0, "evicted": 0,
+            "retries": 0, "demotions": 0, "degraded_steps": 0,
+            "budget_clamped": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # Admission.
+    # ------------------------------------------------------------------
+    def _attention_feasible(self, seq: int) -> bool:
+        """Can every attention workload this request implies be realized
+        under ``self.hw``'s VMEM by at least one explorer candidate?"""
+        if seq in self._admission_cache:
+            return self._admission_cache[seq]
+        ok = True
+        for p in lm.hot_attention_problems(self.cfg, 1, max(seq, 1),
+                                           self.max_len):
+            if not explorer.enumerate_attention_candidates(p, self.hw):
+                ok = False
+                break
+        self._admission_cache[seq] = ok
+        return ok
+
+    def _reject(self, reason: str, exc_type=ValueError) -> None:
+        self._counters["rejected"] += 1
+        self.monitor.note("admission-reject", site="serve.submit",
+                          detail=reason)
+        raise exc_type(reason)
+
+    def submit(self, prompt, max_new_tokens: int,
+               deadline_s: Optional[float] = None) -> Request:
+        """Validate and admit one request (state QUEUED), or raise.
+
+        ``ValueError`` for malformed input (empty / over-``max_len`` /
+        non-integer prompt, non-positive budget); ``AdmissionError``
+        (a ``ValueError`` subclass) when the decode-step attention
+        cannot fit the hardware's VMEM under any dataflow.
+        """
+        self._counters["submitted"] += 1
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1:
+            self._reject(f"prompt must be rank-1 (one request), got "
+                         f"shape {prompt.shape}")
+        if prompt.size == 0:
+            self._reject("empty prompt: need at least one token")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            self._reject(f"prompt dtype must be integer token ids, got "
+                         f"{prompt.dtype}")
+        plen = int(prompt.shape[0])
+        if plen >= self.max_len:
+            self._reject(
+                f"prompt length {plen} leaves no decode room under "
+                f"max_len={self.max_len}")
+        if max_new_tokens < 1:
+            self._reject(f"max_new_tokens must be >= 1, got "
+                         f"{max_new_tokens}")
+        if not self._attention_feasible(plen):
+            self._reject(
+                f"no VMEM-feasible attention dataflow for prompt length "
+                f"{plen} / max_len={self.max_len} on {self.hw.name} "
+                f"({self.hw.vmem_bytes} bytes VMEM)", AdmissionError)
+        budget = min(max_new_tokens, self.max_len - plen)
+        if budget < max_new_tokens:
+            self._counters["budget_clamped"] += 1
+            self.monitor.note(
+                "backpressure", site="serve.submit",
+                detail=f"budget clamped {max_new_tokens} -> {budget} "
+                       f"(cache capacity max_len={self.max_len})")
+        self._counters["admitted"] += 1
+        req = Request(prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=budget, deadline_s=deadline_s,
+                      rid=self._next_rid)
+        self._next_rid += 1
+        return req
+
+    # ------------------------------------------------------------------
+    # Guarded step execution: inject -> run -> sentinel -> retry/demote.
+    # ------------------------------------------------------------------
+    def _execute(self, site: str, step: int, primary: Callable,
+                 degraded: Callable) -> Tuple[Any, Any, str]:
+        """Run one engine step fault-tolerantly.
+
+        Picks the kernel path from the DegradationPolicy, fires the
+        injection site, validates logits finiteness, and on any failure
+        demotes + retries with backoff.  Returns (logits, cache, path).
+        Raises ``StepFailed`` when retries are exhausted.
+        """
+        attempt = 0
+        while True:
+            path = self.policy.backend_for(step, self.monitor)
+            fn = primary if path == "primary" else degraded
+            try:
+                fault = health.maybe_inject(site)
+                logits, cache = fn()
+                if fault == "nan":
+                    logits = logits * jnp.asarray(jnp.nan, logits.dtype)
+                if self.validate_outputs and not bool(
+                        jnp.all(jnp.isfinite(logits))):
+                    raise NonFiniteLogits(
+                        f"non-finite logits from {site} step {step} "
+                        f"({path} path)")
+                return logits, cache, path
+            except Exception as e:
+                # SimulatedFailure, NonFiniteLogits, kernel lowering /
+                # interpret errors — anything a bad step can surface.
+                failure = e
+            self.policy.on_failure(site, step, failure, self.monitor)
+            self._counters["demotions"] += 1
+            attempt += 1
+            if attempt > self.policy.max_retries:
+                raise StepFailed(
+                    f"{site} step {step} failed after "
+                    f"{self.policy.max_retries} retries: "
+                    f"{type(failure).__name__}: {failure}") from failure
+            self._counters["retries"] += 1
+            self.monitor.note("retry", site=site, step=step,
+                              detail=f"attempt {attempt} after "
+                                     f"{type(failure).__name__}")
+            time.sleep(self.policy.backoff_seconds(attempt - 1))
+
+    # ------------------------------------------------------------------
+    # Serving.
+    # ------------------------------------------------------------------
     def _warm_autotune(self, batch: int, seq: int) -> None:
         """Populate the dataflow-spec cache for this request shape so the
         prefill and decode traces hit memoized specs instead of
@@ -97,20 +311,125 @@ class Engine:
                       + lm.hot_binary_problems(self.cfg, batch, seq)
                       + lm.hot_binary_problems(self.cfg, batch, 1))
 
-    def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 greedy: bool = True, seed: int = 0) -> np.ndarray:
-        """prompts: (B, S) equal-length int32. Returns (B, new) tokens."""
+    def serve(self, requests: Sequence[Request], greedy: bool = True,
+              seed: int = 0) -> List[Request]:
+        """Drive a batch of QUEUED requests to a terminal state.
+
+        Requests must share one prompt length (uniform-position cache).
+        Terminal states: DONE (budget reached), EVICTED (deadline),
+        FAILED (step failed beyond retries).  Returns the same request
+        objects for convenience.
+        """
+        reqs = [r for r in requests if r.state == RequestState.QUEUED]
+        if not reqs:
+            return list(requests)
+        lens = {int(r.prompt.shape[0]) for r in reqs}
+        if len(lens) != 1:
+            raise ValueError(
+                f"batch must share one prompt length, got {sorted(lens)}")
+        prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
         self._warm_autotune(prompts.shape[0], prompts.shape[1])
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        outs = []
+        t_start = time.monotonic()
+
+        for r in reqs:
+            r.state = RequestState.PREFILLING
+        dev_prompts = jnp.asarray(prompts)
+        try:
+            logits, cache, path = self._execute(
+                "serve.prefill", 0,
+                lambda: self._prefill(self.params, dev_prompts),
+                lambda: self._prefill_degraded(self.params, dev_prompts))
+        except StepFailed as e:
+            self._fail_batch(reqs, e)
+            return list(requests)
+        if path == "degraded":
+            self._counters["degraded_steps"] += 1
+
+        for r in reqs:
+            r.state = RequestState.DECODING
         key = jax.random.PRNGKey(seed)
-        tok = None
-        for i in range(max_new_tokens):
+        step = 0
+        while True:
+            active = [r for r in reqs if r.state == RequestState.DECODING]
+            if not active:
+                break
+            now = time.monotonic()
+            for r in active:
+                if (r.deadline_s is not None
+                        and now - t_start > r.deadline_s):
+                    r.state = RequestState.EVICTED
+                    r.error = (f"deadline {r.deadline_s:.3f}s exceeded "
+                               f"after {len(r.out_tokens)} tokens")
+                    self._counters["evicted"] += 1
+                    self.monitor.note("evicted", site="serve.decode_step",
+                                      step=step, detail=r.error)
+            active = [r for r in reqs if r.state == RequestState.DECODING]
+            if not active:
+                break
+
             if greedy:
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(sub, logits).astype(jnp.int32)
-            outs.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, cache, tok[:, None])
-        return np.stack(outs, axis=1)
+            tok_np = np.asarray(tok)
+            for i, r in enumerate(reqs):
+                if r.state == RequestState.DECODING:
+                    r.out_tokens.append(int(tok_np[i]))
+                    if len(r.out_tokens) >= r.max_new_tokens:
+                        r.state = RequestState.DONE
+                        self._counters["completed"] += 1
+            if not any(r.state == RequestState.DECODING for r in reqs):
+                break
+
+            step += 1
+            t0 = time.monotonic()
+            try:
+                logits, cache, path = self._execute(
+                    "serve.decode_step", step,
+                    lambda: self._decode(self.params, cache, tok[:, None]),
+                    lambda: self._decode_degraded(self.params, cache,
+                                                  tok[:, None]))
+            except StepFailed as e:
+                self._fail_batch(reqs, e)
+                break
+            if path == "degraded":
+                self._counters["degraded_steps"] += 1
+                for r in reqs:
+                    if r.state == RequestState.DECODING:
+                        r.degraded_steps += 1
+            self.monitor.record(step, time.monotonic() - t0)
+        return list(requests)
+
+    def _fail_batch(self, reqs: List[Request], err: BaseException) -> None:
+        for r in reqs:
+            if r.state in (RequestState.PREFILLING, RequestState.DECODING):
+                r.state = RequestState.FAILED
+                r.error = str(err)
+                self._counters["failed"] += 1
+
+    def stats(self) -> Dict[str, object]:
+        """Admission/backpressure counters merged with the health
+        ledger rollup (``HealthMonitor.report``)."""
+        out: Dict[str, object] = dict(self._counters)
+        out["demoted_now"] = self.policy.demoted
+        out["probes"] = self.policy.probes
+        out["health"] = self.monitor.report()
+        return out
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """prompts: (B, S) equal-length int32. Returns (B, new) tokens.
+
+        Back-compat wrapper over submit/serve: raises on any request
+        that does not finish DONE."""
+        prompts = np.asarray(prompts)
+        reqs = [self.submit(p, max_new_tokens) for p in prompts]
+        self.serve(reqs, greedy=greedy, seed=seed)
+        bad = [r for r in reqs if r.state != RequestState.DONE]
+        if bad:
+            r = bad[0]
+            raise StepFailed(
+                f"request {r.rid} ended {r.state.value}: {r.error}")
+        return np.stack(
+            [np.asarray(r.out_tokens, np.int32) for r in reqs])
