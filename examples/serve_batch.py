@@ -14,6 +14,18 @@ drill:
 
 and watch the demotion + retry land in the report (see
 docs/robustness.md).
+
+Resume-after-kill drill: journal to a directory, SIGKILL the loop
+mid-decode (the `kill` fault kind delivers a real SIGKILL), and rerun
+with --resume — the restarted engine recovers every in-flight request
+from the journal + newest snapshot and finishes with the exact greedy
+tokens the uninterrupted run would have produced:
+
+    REPRO_FAULT_PLAN="serve.decode_step:10:kill" \
+        PYTHONPATH=src python examples/serve_batch.py \
+        --journal-dir /tmp/serve-crash --snapshot-every 4 || true
+    PYTHONPATH=src python examples/serve_batch.py \
+        --journal-dir /tmp/serve-crash --resume
 """
 import argparse
 import time
@@ -32,6 +44,13 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--journal-dir", default=None,
+                    help="journal requests (WAL) + snapshots here; "
+                         "enables --resume after a kill")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="snapshot cadence in decode steps")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover and finish journaled requests")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -39,17 +58,26 @@ def main() -> None:
           f"reduced config)")
     params = lm.init_model(cfg, jax.random.PRNGKey(0))
     engine = Engine(cfg, params,
-                    max_len=args.prompt_len + args.new_tokens + 8)
+                    max_len=args.prompt_len + args.new_tokens + 8,
+                    journal_dir=args.journal_dir,
+                    snapshot_every=args.snapshot_every)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()
-    reqs = [engine.submit(p, args.new_tokens) for p in prompts]
-    engine.serve(reqs)
+    if args.resume:
+        reqs = engine.restore()
+        print(f"restored {len(reqs)} journaled request(s), "
+              f"{engine.stats()['recovered']} in flight")
+        engine.serve(reqs)
+    else:
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(
+            0, cfg.vocab_size,
+            (args.batch, args.prompt_len)).astype(np.int32)
+        reqs = [engine.submit(p, args.new_tokens) for p in prompts]
+        engine.serve(reqs)
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"batch={args.batch} prompt={args.prompt_len} "
+    print(f"batch={len(reqs)} prompt={args.prompt_len} "
           f"new={args.new_tokens}: {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s incl. prefill+compile)")
     for r in reqs:

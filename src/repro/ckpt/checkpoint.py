@@ -11,6 +11,26 @@ file in a background thread; ``wait()`` joins before the next save so at
 most one write is in flight.  Restore takes target shardings, so state
 can be loaded onto a *different* mesh than it was saved from (elastic
 restart — runtime/elastic.py).
+
+Durability contract (drilled by the ``ckpt.write`` fault site and the
+crash-drill CI job):
+
+  * ``arrays.npz``, ``manifest.json`` and the step directory are all
+    fsync'd *before* ``LATEST`` flips, so a pointed-at step is always
+    complete even across a machine crash;
+  * an existing step directory is swapped out with a side-rename
+    (``step_N`` -> ``step_N.trash`` -> ``step_N.tmp`` -> ``step_N``)
+    instead of the old ``rmtree`` + ``rename`` — there is no window in
+    which the payload exists only as deleted inodes;
+  * ``LATEST`` itself is written via fsync'd temp file + ``os.replace``;
+  * a kill at *any* point leaves either the previous pointed-at step or
+    the new one fully intact; stale ``.tmp``/``.trash`` residue is swept
+    by the next save's ``_gc``.
+
+Failure surfacing: the background writer never swallows exceptions —
+an async save failure is captured and re-raised (as ``CheckpointError``)
+on the next ``wait()`` or ``save()``, and counted in
+``stats()['save_errors']`` (mirroring ``core.autotune.stats``).
 """
 from __future__ import annotations
 
@@ -18,16 +38,24 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import health
+
+health.register_site("ckpt.write")
+
 # dtypes np.savez cannot store natively (ml_dtypes): widen to f32 on disk,
 # narrow back on restore using the manifest's logical dtype (bit-exact for
 # bf16 since bf16 -> f32 is a widening).
 _WIDEN = {"bfloat16": np.float32, "float8_e4m3fn": np.float32}
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint write failed (possibly asynchronously)."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -40,32 +68,61 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file by path (payload written via library APIs)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (renames, creates) are durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._save_error: Optional[BaseException] = None
+        self._stats = {
+            "saves": 0,          # _write completions
+            "save_errors": 0,    # _write failures (sync or async)
+            "restores": 0,
+            "gc_removed": 0,     # step dirs + stale tmp/trash swept
+        }
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any],
              extras: Optional[Dict] = None, blocking: bool = False) -> None:
-        """state: dict of pytrees (e.g. {"params": ..., "opt": ...})."""
+        """state: dict of pytrees (e.g. {"params": ..., "opt": ...}).
+
+        Raises ``CheckpointError`` here if the *previous* async save
+        failed (the error would otherwise be invisible); a failure of
+        this save is raised directly when ``blocking``, else surfaced
+        on the next ``wait()``/``save()``.
+        """
         self.wait()
         host_state = {
             name: {k: np.asarray(jax.device_get(v))
                    for k, v in _flatten(tree).items()}
             for name, tree in state.items()
         }
-        treedefs = {
-            name: jax.tree_util.tree_structure(tree)
-            for name, tree in state.items()
-        }
 
         def _write():
             d = os.path.join(self.dir, f"step_{step:08d}")
             tmp = d + ".tmp"
-            os.makedirs(tmp, exist_ok=True)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
             arrays = {}
             manifest = {"step": step, "extras": extras or {}, "trees": {}}
             for name, leaves in host_state.items():
@@ -79,41 +136,136 @@ class Checkpointer:
             np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f, indent=2)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_path(os.path.join(tmp, "arrays.npz"))
+            _fsync_dir(tmp)
+            # mid-write drill point: payload durable under .tmp, not yet
+            # published — a kill here must leave the previous step (and
+            # LATEST) fully intact
+            health.maybe_inject("ckpt.write")
+            trash = None
             if os.path.exists(d):
-                shutil.rmtree(d)
+                trash = d + ".trash"
+                if os.path.exists(trash):
+                    shutil.rmtree(trash)
+                os.rename(d, trash)
             os.rename(tmp, d)
+            _fsync_dir(self.dir)
             latest = os.path.join(self.dir, "LATEST")
             with open(latest + ".tmp", "w") as f:
                 f.write(os.path.basename(d))
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(latest + ".tmp", latest)
+            _fsync_dir(self.dir)
+            if trash is not None:
+                shutil.rmtree(trash, ignore_errors=True)
             self._gc()
+            self._stats["saves"] += 1
 
         if blocking:
-            _write()
+            try:
+                _write()
+            except BaseException as e:
+                self._stats["save_errors"] += 1
+                raise CheckpointError(
+                    f"checkpoint save at step {step} failed: "
+                    f"{type(e).__name__}: {e}") from e
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            def _guarded():
+                try:
+                    _write()
+                except BaseException as e:   # surfaced on wait()/save()
+                    self._stats["save_errors"] += 1
+                    self._save_error = e
+
+            self._thread = threading.Thread(target=_guarded, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight async save; raise its captured failure.
+
+        The daemon writer thread cannot raise into the caller, so this
+        is where an async ``save(blocking=False)`` failure becomes
+        visible — silently losing checkpoints is the one thing a
+        crash-safety layer may never do.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._save_error is not None:
+            err, self._save_error = self._save_error, None
+            raise CheckpointError(
+                f"async checkpoint save failed: "
+                f"{type(err).__name__}: {err}") from err
+
+    def stats(self) -> Dict[str, int]:
+        return dict(self._stats)
 
     def _gc(self) -> None:
-        steps = sorted(
-            d for d in os.listdir(self.dir) if d.startswith("step_")
-        )
-        for d in steps[: -self.keep]:
+        removed = 0
+        entries = sorted(os.listdir(self.dir))
+        live = [d for d in entries
+                if d.startswith("step_") and not d.endswith((".tmp",
+                                                             ".trash"))]
+        for d in live[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+            removed += 1
+        for d in entries:
+            # residue a kill left between publish and cleanup; at most
+            # one write is ever in flight and it has already renamed
+            # its own tmp away by the time _gc runs, so anything still
+            # here is stale
+            if d.startswith("step_") and d.endswith((".tmp", ".trash")):
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
+                removed += 1
+        self._stats["gc_removed"] += removed
 
     # -- restore --------------------------------------------------------------
+    def steps(self) -> List[int]:
+        """Complete steps on disk (manifest present), ascending."""
+        out = []
+        try:
+            entries = os.listdir(self.dir)
+        except OSError:
+            return out
+        for d in sorted(entries):
+            if not d.startswith("step_") or d.endswith((".tmp", ".trash")):
+                continue
+            if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return out
+
     def latest_step(self) -> Optional[int]:
         latest = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(latest):
-            return None
-        with open(latest) as f:
-            name = f.read().strip()
-        return int(name.split("_")[1])
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            try:
+                step = int(name.split("_")[1])
+            except (IndexError, ValueError):
+                step = None
+            if step is not None and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                return step
+        # LATEST missing or dangling (kill inside the swap window):
+        # fall back to the newest complete step on disk
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The manifest of ``step`` (default latest) without payload I/O."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
 
     def restore(self, templates: Dict[str, Any],
                 shardings: Optional[Dict[str, Any]] = None,
@@ -151,4 +303,5 @@ class Checkpointer:
                 )
             treedef = jax.tree_util.tree_structure(tree)
             out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._stats["restores"] += 1
         return manifest["step"], out, manifest.get("extras", {})

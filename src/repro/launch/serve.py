@@ -3,6 +3,18 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+Crash-safe serving: give it a journal directory and a snapshot cadence
+and every admission/token/terminal transition is journaled, with
+periodic engine snapshots; after a kill, ``--resume`` replays the
+journal (and newest snapshot) and finishes the interrupted batch with
+bit-identical greedy tokens:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --journal-dir /tmp/serve-journal --snapshot-every 4
+  # ... SIGKILL mid-decode, then:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --journal-dir /tmp/serve-journal --resume
 """
 from __future__ import annotations
 
@@ -24,26 +36,45 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--journal-dir", default=None,
+                    help="enable the durable request journal (WAL) + "
+                         "snapshots under this directory")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="engine snapshot cadence in decode steps "
+                         "(default: REPRO_SNAPSHOT_EVERY)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover journaled requests after a crash and "
+                         "finish serving them")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(
         args.arch)
     params = lm.init_model(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)
-    ).astype(np.int32)
     engine = Engine(cfg, params,
-                    max_len=args.prompt_len + args.new_tokens + 8)
-    out = engine.generate(prompts, args.new_tokens)
-    print(f"generated {out.shape} tokens:")
-    for row in out:
-        print("  ", row.tolist())
+                    max_len=args.prompt_len + args.new_tokens + 8,
+                    journal_dir=args.journal_dir,
+                    snapshot_every=args.snapshot_every)
+    if args.resume:
+        reqs = engine.restore()
+        engine.serve(reqs)
+        print(f"resumed {len(reqs)} journaled request(s):")
+    else:
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len)
+        ).astype(np.int32)
+        reqs = [engine.submit(p, args.new_tokens) for p in prompts]
+        engine.serve(reqs)
+    for r in reqs:
+        print(f"  req{r.rid} [{r.state.value}]: {r.out_tokens}")
     stats = engine.stats()
     print(f"engine: admitted={stats['admitted']} "
           f"completed={stats['completed']} retries={stats['retries']} "
           f"demotions={stats['demotions']} "
-          f"degraded_steps={stats['degraded_steps']}")
+          f"degraded_steps={stats['degraded_steps']} "
+          f"snapshots={stats['snapshots_saved']} "
+          f"recovered={stats['recovered']} "
+          f"replayed_steps={stats['replayed_steps']}")
 
 
 if __name__ == "__main__":

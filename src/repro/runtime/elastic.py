@@ -29,6 +29,9 @@ def largest_grid(n_devices: int, max_model: int,
     ``model_divisors``: candidate TP sizes, e.g. (16, 8, 4, 2, 1)
     filtered by the arch's dims.
     """
+    if n_devices < 1:
+        raise ValueError(
+            f"cannot plan a mesh over {n_devices} surviving devices")
     best = (n_devices, 1)
     best_used = n_devices
     for model in sorted(set(model_divisors), reverse=True):
@@ -45,16 +48,26 @@ def largest_grid(n_devices: int, max_model: int,
 class ReshardPlan:
     new_mesh: Mesh
     param_shardings: Any
-    opt_shardings: Any
+    opt_shardings: Any = None
+    cache_shardings: Any = None
 
 
 def plan_remesh(
     surviving_devices: List,
     params_shape,
-    opt_shape,
+    opt_shape=None,
     model_divisors: Sequence[int] = (16, 8, 4, 2, 1),
     max_model: int = 16,
+    cache_shape=None,
 ) -> ReshardPlan:
+    """Plan the survivors' mesh + shardings for every state family.
+
+    ``opt_shape`` is optional so inference restarts (serve.Engine
+    crash recovery) can plan without optimizer state; ``cache_shape``
+    (a KV-cache shape pytree) additionally yields the shardings the
+    Checkpointer needs to restore a snapshot's cache onto the new —
+    possibly smaller — mesh.
+    """
     data, model = largest_grid(len(surviving_devices), max_model,
                                model_divisors)
     n_used = data * model
@@ -63,7 +76,10 @@ def plan_remesh(
     return ReshardPlan(
         new_mesh=mesh,
         param_shardings=shard_rules.param_shardings(params_shape, mesh),
-        opt_shardings=shard_rules.opt_state_shardings(opt_shape, mesh),
+        opt_shardings=(shard_rules.opt_state_shardings(opt_shape, mesh)
+                       if opt_shape is not None else None),
+        cache_shardings=(shard_rules.cache_shardings(cache_shape, mesh)
+                         if cache_shape is not None else None),
     )
 
 

@@ -23,6 +23,11 @@ fires (``*`` = every hit) and ``kind`` is one of
                   non-finite sentinel downstream)
     hang-timeout  sleep ``REPRO_FAULT_HANG_S`` seconds (default 0.25)
                   before continuing — a straggler, not a crash
+    kill          SIGKILL the whole process at the site — an
+                  *unhandleable* crash (no finally blocks, no atexit,
+                  no flushing).  The crash-drill CI job arms this at
+                  journaled serve steps and asserts the restarted
+                  engine replays bit-exactly (serve/journal.py)
 
 Sites inside jit-traced code (the ``kernel.*`` and ``layers.*`` family)
 fire at trace/lowering time — once per distinct compiled shape — which
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import signal
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -44,7 +50,7 @@ class SimulatedFailure(RuntimeError):
     """Raised by an armed ``raise``-kind injection site."""
 
 
-FAULT_KINDS = ("raise", "nan", "hang-timeout")
+FAULT_KINDS = ("raise", "nan", "hang-timeout", "kill")
 
 # Canonical injection sites.  Modules owning additional dispatch points
 # register theirs at import time via ``register_site`` — the CI fault
@@ -163,6 +169,12 @@ def maybe_inject(site: str, step: Optional[int] = None) -> Optional[str]:
         if spec.kind == "raise":
             raise SimulatedFailure(
                 f"injected failure at {site} (hit {idx})")
+        if spec.kind == "kill":
+            # A real crash: SIGKILL cannot be caught, so nothing below
+            # this frame (journal fsyncs, checkpoint renames, atexit)
+            # gets to run — exactly the window crash recovery must
+            # survive.
+            os.kill(os.getpid(), signal.SIGKILL)
         if spec.kind == "hang-timeout":
             time.sleep(fault_hang_seconds())
         return spec.kind

@@ -32,11 +32,35 @@ the batch; ``max_new_tokens`` budgets are clamped to the cache capacity
 (``max_len``).  ``stats()`` reports admission/backpressure counters next
 to the ``HealthMonitor`` ledger, so demotions, retries, stragglers and
 injected faults surface in one place.
+
+Crash safety (PR 7) extends no-request-*fails* to no-request-is-*lost*:
+
+  * every admission, emitted token and terminal transition is written
+    ahead to a durable ``RequestJournal`` (serve/journal.py) when the
+    engine is given a journal directory (``journal_dir=`` or
+    ``REPRO_JOURNAL_DIR``);
+  * ``snapshot()`` persists the full engine state — request table,
+    emitted tokens, counters, health ledger, KV cache, last logits and
+    params — through ``ckpt.Checkpointer``, on a decode-step cadence
+    (``snapshot_every=`` / ``REPRO_SNAPSHOT_EVERY``);
+  * after a kill, a fresh engine's ``restore()`` rebuilds the request
+    table from the journal, loads the newest intact snapshot (falling
+    back across corrupt ones, then to journal-only cold replay), and
+    re-admits in-flight requests at their exact decode position; the
+    next ``serve()`` call continues the decode loop from the restored
+    pre-step cache.  Greedy decode is a pure function of params + the
+    journaled prompts, so the recovered token streams are bit-identical
+    to the uninterrupted run — the crash-drill CI job SIGKILLs the loop
+    at journaled steps and asserts exactly that.  ``restore()`` accepts
+    a ``devices=`` survivor list and reshards the snapshot through
+    ``runtime.elastic.plan_remesh``, so recovery works onto a smaller
+    mesh than the one that crashed.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -44,9 +68,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.checkpoint import Checkpointer, CheckpointError
 from repro.core import autotune, cost_model, explorer
 from repro.models import layers, lm
-from repro.runtime import health
+from repro.runtime import elastic, health
+from repro.serve import journal as journal_lib
+
+health.register_site("snapshot.save")
+health.register_site("engine.restore")
 
 
 def make_serve_step(cfg, dist: Optional[lm.Dist] = None,
@@ -78,6 +107,21 @@ class RequestState(str, enum.Enum):
     DONE = "done"
     FAILED = "failed"
     EVICTED = "evicted"
+
+
+_TERMINAL = ("done", "failed", "evicted")
+
+
+def _terminal(state: "RequestState") -> bool:
+    return state.value in _TERMINAL
+
+
+def to_state_safe(value) -> "RequestState":
+    """RequestState from a journal/snapshot string; QUEUED on junk."""
+    try:
+        return RequestState(value)
+    except ValueError:
+        return RequestState.QUEUED
 
 
 class AdmissionError(ValueError):
@@ -124,7 +168,10 @@ class Engine:
                  monitor: Optional[health.HealthMonitor] = None,
                  policy: Optional[health.DegradationPolicy] = None,
                  hw: cost_model.HardwareSpec = cost_model.V5E,
-                 validate_outputs: bool = True):
+                 validate_outputs: bool = True,
+                 journal_dir: Optional[str] = None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -133,6 +180,19 @@ class Engine:
         self.validate_outputs = validate_outputs
         self.monitor = monitor if monitor is not None else health.HealthMonitor()
         self.policy = policy if policy is not None else health.DegradationPolicy()
+        jd = journal_dir or journal_lib.journal_dir()
+        self.journal = journal_lib.RequestJournal(jd) if jd else None
+        sd = snapshot_dir or (os.path.join(jd, "snapshots") if jd else None)
+        self.snapshots = Checkpointer(sd) if sd else None
+        if snapshot_every is None:
+            snapshot_every = int(
+                os.environ.get("REPRO_SNAPSHOT_EVERY", "0") or 0)
+        self.snapshot_every = snapshot_every
+        # live serve-loop state for snapshot(): (reqs, cache, logits,
+        # step, greedy, seed) — valid between decode steps only
+        self._live: Optional[Tuple] = None
+        self._pending_resume: Optional[Dict[str, Any]] = None
+        self._replay_expected: Dict[int, List[int]] = {}
         self._decode = jax.jit(make_serve_step(cfg, dist))
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, max_len=max_len, dist=dist)
@@ -161,6 +221,9 @@ class Engine:
             "completed": 0, "failed": 0, "evicted": 0,
             "retries": 0, "demotions": 0, "degraded_steps": 0,
             "budget_clamped": 0,
+            "snapshots_saved": 0, "snapshot_errors": 0,
+            "recovered": 0, "replayed_steps": 0,
+            "replay_divergence": 0, "restore_fallbacks": 0,
         }
 
     # ------------------------------------------------------------------
@@ -230,6 +293,15 @@ class Engine:
                       max_new_tokens=budget, deadline_s=deadline_s,
                       rid=self._next_rid)
         self._next_rid += 1
+        if self.journal is not None:
+            # WAL contract: the caller is told "admitted" only after the
+            # admission is durable, so a kill can never lose a request
+            # the client believes is in flight
+            self.journal.append(
+                "submit", fsync=True, rid=req.rid,
+                prompt=[int(t) for t in req.prompt],
+                max_new_tokens=req.max_new_tokens,
+                deadline_s=req.deadline_s)
         return req
 
     # ------------------------------------------------------------------
@@ -319,8 +391,30 @@ class Engine:
         Terminal states: DONE (budget reached), EVICTED (deadline),
         FAILED (step failed beyond retries).  Returns the same request
         objects for convenience.
+
+        After ``restore()``, serving requests that include a recovered
+        in-flight batch continues that batch from its restored decode
+        position — the snapshot's pre-step cache and logits when one
+        was loaded, or a fresh prefill + deterministic re-decode (cold
+        replay) otherwise.  The resumed loop uses the *journaled*
+        greedy/seed, not this call's arguments, so replay cannot be
+        skewed by a caller passing different sampling settings.
         """
-        reqs = [r for r in requests if r.state == RequestState.QUEUED]
+        pending = self._take_resume(requests)
+        if pending is not None:
+            greedy, seed = pending["greedy"], pending["seed"]
+            reqs = pending["reqs"]
+            if pending["cache"] is not None:
+                # warm restart: decode continues on the snapshot cache
+                self._decode_loop(reqs, pending["cache"],
+                                  pending["logits"], pending["step"],
+                                  time.monotonic(), greedy, seed)
+                self._check_replay(requests)
+                return list(requests)
+            # cold restart: re-prefill the journaled batch below
+            reqs = [r for r in reqs if r.state == RequestState.QUEUED]
+        else:
+            reqs = [r for r in requests if r.state == RequestState.QUEUED]
         if not reqs:
             return list(requests)
         lens = {int(r.prompt.shape[0]) for r in reqs}
@@ -330,6 +424,12 @@ class Engine:
         prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
         self._warm_autotune(prompts.shape[0], prompts.shape[1])
         t_start = time.monotonic()
+        if self.journal is not None:
+            # batch composition a later cold replay must reproduce
+            self.journal.append(
+                "serve", fsync=True, rids=[r.rid for r in reqs],
+                seed=int(seed), greedy=bool(greedy),
+                prompt_len=int(prompts.shape[1]))
 
         for r in reqs:
             r.state = RequestState.PREFILLING
@@ -347,8 +447,28 @@ class Engine:
 
         for r in reqs:
             r.state = RequestState.DECODING
+        self._decode_loop(reqs, cache, logits, 0, t_start, greedy, seed)
+        self._check_replay(requests)
+        return list(requests)
+
+    def _decode_loop(self, reqs: List[Request], cache, logits, step: int,
+                     t_start: float, greedy: bool, seed: int) -> None:
+        """The decode loop, resumable at any ``step``.
+
+        ``reqs`` is the batch in cache-row order (terminal members stay
+        inert but keep their rows); ``logits`` predicts the *next*
+        token, ``cache`` holds everything up to and including step
+        ``step`` — the same pre-step-cache contract the PR-6 retry path
+        relies on, which is what makes both snapshot resume and retry
+        composable with each other.
+        """
         key = jax.random.PRNGKey(seed)
-        step = 0
+        if not greedy:
+            # fast-forward the PRNG stream to the resume position so
+            # sampled replay of an unchanged batch is deterministic too
+            for _ in range(step):
+                key, _ = jax.random.split(key)
+        self._live = (reqs, cache, logits, step, greedy, seed)
         while True:
             active = [r for r in reqs if r.state == RequestState.DECODING]
             if not active:
@@ -363,6 +483,7 @@ class Engine:
                     self._counters["evicted"] += 1
                     self.monitor.note("evicted", site="serve.decode_step",
                                       step=step, detail=r.error)
+                    self._journal_terminal(r, step)
             active = [r for r in reqs if r.state == RequestState.DECODING]
             if not active:
                 break
@@ -375,10 +496,19 @@ class Engine:
             tok_np = np.asarray(tok)
             for i, r in enumerate(reqs):
                 if r.state == RequestState.DECODING:
-                    r.out_tokens.append(int(tok_np[i]))
+                    t = int(tok_np[i])
+                    r.out_tokens.append(t)
+                    if self.journal is not None:
+                        # position-addressed so a replayed step that
+                        # re-emits an already-journaled token overwrites
+                        # instead of duplicating on the next recovery
+                        self.journal.append("token", rid=r.rid,
+                                            step=len(r.out_tokens),
+                                            token=t)
                     if len(r.out_tokens) >= r.max_new_tokens:
                         r.state = RequestState.DONE
                         self._counters["completed"] += 1
+                        self._journal_terminal(r, step)
             if not any(r.state == RequestState.DECODING for r in reqs):
                 break
 
@@ -391,7 +521,7 @@ class Engine:
                     lambda: self._decode_degraded(self.params, cache,
                                                   tok[:, None]))
             except StepFailed as e:
-                self._fail_batch(reqs, e)
+                self._fail_batch(reqs, e, step)
                 break
             if path == "degraded":
                 self._counters["degraded_steps"] += 1
@@ -399,22 +529,304 @@ class Engine:
                     if r.state == RequestState.DECODING:
                         r.degraded_steps += 1
             self.monitor.record(step, time.monotonic() - t0)
-        return list(requests)
+            self._live = (reqs, cache, logits, step, greedy, seed)
+            if (self.snapshot_every and self.snapshots is not None
+                    and step % self.snapshot_every == 0):
+                self.snapshot()
 
-    def _fail_batch(self, reqs: List[Request], err: BaseException) -> None:
+    def _journal_terminal(self, r: Request,
+                          step: Optional[int] = None) -> None:
+        if self.journal is not None:
+            self.journal.append(r.state.value, fsync=True, rid=r.rid,
+                                step=step, error=r.error)
+
+    def _fail_batch(self, reqs: List[Request], err: BaseException,
+                    step: Optional[int] = None) -> None:
         for r in reqs:
             if r.state in (RequestState.PREFILLING, RequestState.DECODING):
                 r.state = RequestState.FAILED
                 r.error = str(err)
                 self._counters["failed"] += 1
+                self._journal_terminal(r, step)
+
+    # ------------------------------------------------------------------
+    # Crash safety: snapshot, restore, deterministic replay.
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Optional[int]:
+        """Persist the live serve-loop state through the Checkpointer.
+
+        Saved: params, KV cache, last logits (the ``arrays.npz``
+        payload) plus the request table, emitted tokens, counters and
+        health ledger (the manifest extras).  Returns the snapshotted
+        decode step, or None when there is nothing live to snapshot or
+        the save failed — a snapshot failure (disk full, injected
+        ``snapshot.save``/``ckpt.write`` fault) degrades the recovery
+        point, it never takes down serving.
+        """
+        if self.snapshots is None or self._live is None:
+            return None
+        reqs, cache, logits, step, greedy, seed = self._live
+        try:
+            health.maybe_inject("snapshot.save")
+            extras = {
+                "step": step, "greedy": bool(greedy), "seed": int(seed),
+                "rids": [r.rid for r in reqs],
+                "requests": [{
+                    "rid": r.rid, "state": r.state.value,
+                    "prompt": [int(t) for t in r.prompt],
+                    "max_new_tokens": r.max_new_tokens,
+                    "deadline_s": r.deadline_s,
+                    "out_tokens": list(r.out_tokens),
+                    "error": r.error,
+                } for r in reqs],
+                "counters": dict(self._counters),
+                "health_events": [[e.kind, e.site, e.step, e.detail]
+                                  for e in self.monitor.events],
+            }
+            self.snapshots.save(
+                step,
+                {"params": self.params, "cache": cache,
+                 "logits": {"arr": logits}},
+                extras=extras, blocking=True)
+        except (CheckpointError, OSError, health.SimulatedFailure) as e:
+            self._counters["snapshot_errors"] += 1
+            self.monitor.note("snapshot-error", site="snapshot.save",
+                              step=step,
+                              detail=f"{type(e).__name__}: {e}")
+            return None
+        self._counters["snapshots_saved"] += 1
+        if self.journal is not None:
+            self.journal.append("snapshot", fsync=True, step=step)
+        return step
+
+    def restore(self, devices: Optional[Sequence] = None) -> List[Request]:
+        """Rebuild journaled requests after a crash; arm the resume.
+
+        Returns every journaled request, in rid order: requests that
+        reached a durable terminal state come back exactly as they
+        ended (tokens included — nothing lost, nothing duplicated);
+        in-flight requests come back re-admitted at their exact decode
+        position, ready for the next ``serve()`` call to finish.
+
+        Recovery sources, best to worst: the newest intact snapshot
+        (corrupt or fault-injected ones fall back to older steps —
+        ``stats()['restore_fallbacks']``), else journal-only cold
+        replay (re-prefill + deterministic re-decode).  With
+        ``devices`` given, snapshot state is restored through
+        ``elastic.plan_remesh`` target shardings, so a restart that
+        lost devices recovers onto the surviving mesh.
+        """
+        if self.journal is None:
+            raise ValueError(
+                "restore() needs a journal: construct the Engine with "
+                "journal_dir= or set REPRO_JOURNAL_DIR")
+        records = self.journal.scan()
+        table = journal_lib.replay_table(records)
+        to_state = {s.value: s for s in RequestState}
+        reqs: Dict[int, Request] = {}
+        for rid in sorted(table):
+            row = table[rid]
+            r = Request(prompt=np.asarray(row["prompt"], np.int32),
+                        max_new_tokens=row["max_new_tokens"],
+                        deadline_s=row["deadline_s"], rid=rid,
+                        state=to_state[row["state"]])
+            r.out_tokens = list(row["tokens"])
+            r.error = row["error"]
+            reqs[rid] = r
+        if reqs:
+            self._next_rid = max(self._next_rid, max(reqs) + 1)
+
+        snap = None
+        if self.snapshots is not None:
+            for snap_step in reversed(self.snapshots.steps()):
+                try:
+                    health.maybe_inject("engine.restore")
+                    snap = self._load_snapshot(snap_step, devices)
+                    break
+                except Exception as e:
+                    # corrupt snapshot (torn npz/manifest) or injected
+                    # fault: quarantine-in-place and fall back — first
+                    # to an older snapshot, then to cold replay
+                    self._counters["restore_fallbacks"] += 1
+                    self.monitor.note(
+                        "restore-fallback", site="engine.restore",
+                        step=snap_step,
+                        detail=f"{type(e).__name__}: {e}")
+                    snap = None
+
+        if snap is not None:
+            self._arm_snapshot_resume(snap, reqs)
+        else:
+            self._arm_cold_resume(records, reqs)
+        out = [reqs[rid] for rid in sorted(reqs)]
+        recovered = [r for r in out if not _terminal(r.state)]
+        self._counters["recovered"] += len(recovered)
+        self.monitor.note(
+            "restore", site="engine.restore",
+            detail=f"{len(out)} journaled requests, "
+                   f"{len(recovered)} in flight, "
+                   f"{'warm' if snap is not None else 'cold'} resume")
+        return out
+
+    def _load_snapshot(self, step: int, devices: Optional[Sequence]):
+        """Load one snapshot step; raises on any corruption."""
+        man = self.snapshots.manifest(step)
+        templates = {
+            "params": jax.eval_shape(lambda: self.params),
+            "cache": {k: 0 for k in man["trees"]["cache"]},
+            "logits": {"arr": 0},
+        }
+        shardings = None
+        if devices is not None:
+            cache_shape = {
+                k: jax.ShapeDtypeStruct(tuple(m["shape"]),
+                                        jnp.dtype(m["dtype"]))
+                for k, m in man["trees"]["cache"].items()
+            }
+            plan = elastic.plan_remesh(
+                list(devices), templates["params"],
+                cache_shape=cache_shape)
+            shardings = {"params": plan.param_shardings,
+                         "cache": plan.cache_shardings}
+        _, state, extras = self.snapshots.restore(
+            templates, shardings, step=step)
+        return state, extras
+
+    def _arm_snapshot_resume(self, snap, reqs: Dict[int, Request]) -> None:
+        """Warm restart: requests re-admitted at the snapshot step."""
+        state, extras = snap
+        self.params = state["params"]
+        step = int(extras["step"])
+        snap_reqs = {sr["rid"]: sr for sr in extras.get("requests", [])}
+        batch: List[Request] = []
+        for rid in extras["rids"]:
+            sr = snap_reqs.get(rid, {})
+            r = reqs.get(rid)
+            if r is None and sr:
+                # journal lost the submit record (corruption) — the
+                # snapshot's request table is the second source of truth
+                r = Request(prompt=np.asarray(sr["prompt"], np.int32),
+                            max_new_tokens=sr["max_new_tokens"],
+                            deadline_s=sr.get("deadline_s"), rid=rid,
+                            state=to_state_safe(sr.get("state")))
+                r.out_tokens = list(sr.get("out_tokens", []))
+                r.error = sr.get("error")
+                reqs[rid] = r
+            if r is None:
+                raise CheckpointError(
+                    f"snapshot step {step} names rid {rid} known to "
+                    f"neither journal nor snapshot request table")
+            snap_state = to_state_safe(sr.get("state")) if sr else None
+            if _terminal(r.state):
+                pass                     # journal terminal: authoritative
+            elif snap_state is not None and _terminal(snap_state):
+                # journal lost the terminal record but the snapshot has
+                # it — adopt the snapshot's final word
+                r.state = snap_state
+                r.out_tokens = list(sr.get("out_tokens", r.out_tokens))
+                r.error = sr.get("error", r.error)
+            else:
+                # journal may be ahead of the snapshot (tokens emitted
+                # after the save): keep them as the replay expectation,
+                # rewind the live position to the snapshot's
+                if len(r.out_tokens) > step:
+                    self._replay_expected[rid] = list(r.out_tokens)
+                out = sr.get("out_tokens")
+                r.out_tokens = (list(out) if out is not None
+                                else r.out_tokens[:step])
+                self._counters["replayed_steps"] += max(
+                    0, len(self._replay_expected.get(rid, []))
+                    - len(r.out_tokens))
+                r.state = RequestState.DECODING
+            batch.append(r)
+        for k, v in extras.get("counters", {}).items():
+            if k in self._counters:
+                self._counters[k] = max(self._counters[k], int(v))
+        for kind, site, estep, detail in extras.get("health_events", []):
+            self.monitor.events.append(health.HealthEvent(
+                kind=kind, site=site, step=estep, detail=detail))
+        self._pending_resume = {
+            "reqs": batch,
+            "cache": state["cache"],
+            "logits": state["logits"]["arr"],
+            "step": step,
+            "greedy": bool(extras["greedy"]),
+            "seed": int(extras["seed"]),
+        }
+
+    def _arm_cold_resume(self, records: List[dict],
+                         reqs: Dict[int, Request]) -> None:
+        """No usable snapshot: replay in-flight requests from prefill.
+
+        Greedy decode is a pure function of params + journaled prompt,
+        so rewinding to QUEUED and re-serving reproduces the lost
+        tokens bit-exactly; the journaled prefix is kept as the replay
+        expectation and verified after the resumed serve.
+        """
+        serves = [rec for rec in records if rec.get("kind") == "serve"]
+        if not serves:
+            return                      # crash before any serve: QUEUED
+        last = serves[-1]
+        batch = []
+        for rid in last.get("rids", []):
+            r = reqs.get(rid)
+            if r is None or _terminal(r.state):
+                continue
+            if r.out_tokens:
+                self._replay_expected[rid] = list(r.out_tokens)
+                self._counters["replayed_steps"] += len(r.out_tokens)
+            r.out_tokens = []
+            r.state = RequestState.QUEUED
+            batch.append(r)
+        if batch:
+            self._pending_resume = {
+                "reqs": batch, "cache": None, "logits": None, "step": 0,
+                "greedy": bool(last.get("greedy", True)),
+                "seed": int(last.get("seed", 0)),
+            }
+
+    def _take_resume(self, requests: Sequence[Request]):
+        """Pop the armed resume iff its batch is inside ``requests``."""
+        if self._pending_resume is None:
+            return None
+        given = {id(r) for r in requests}
+        if all(id(r) in given for r in self._pending_resume["reqs"]):
+            pending, self._pending_resume = self._pending_resume, None
+            return pending
+        return None
+
+    def _check_replay(self, requests: Sequence[Request]) -> None:
+        """Verify re-decoded tokens against the pre-crash journal.
+
+        Determinism makes the replayed prefix bit-identical; a
+        divergence means corrupted state (bad snapshot, bit-flipped
+        journal record, changed params) and is ledgered loudly — the
+        recomputed tokens win, since they came from the live model.
+        """
+        for r in requests:
+            exp = self._replay_expected.pop(r.rid, None)
+            if exp is None:
+                continue
+            n = min(len(exp), len(r.out_tokens))
+            if r.out_tokens[:n] != exp[:n]:
+                self._counters["replay_divergence"] += 1
+                self.monitor.note(
+                    "replay-divergence", site="engine.restore",
+                    detail=f"rid {r.rid}: journaled {exp[:n]} vs "
+                           f"replayed {r.out_tokens[:n]}")
 
     def stats(self) -> Dict[str, object]:
         """Admission/backpressure counters merged with the health
-        ledger rollup (``HealthMonitor.report``)."""
+        ledger rollup (``HealthMonitor.report``) and, when configured,
+        the journal/snapshot durability counters."""
         out: Dict[str, object] = dict(self._counters)
         out["demoted_now"] = self.policy.demoted
         out["probes"] = self.policy.probes
         out["health"] = self.monitor.report()
+        if self.journal is not None:
+            out["journal"] = self.journal.stats()
+        if self.snapshots is not None:
+            out["snapshots"] = self.snapshots.stats()
         return out
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,

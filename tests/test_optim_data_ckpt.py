@@ -138,3 +138,90 @@ def test_checkpoint_async_save(tmp_path):
     ck.save(5, state, blocking=False)
     ck.wait()
     assert ck.latest_step() == 5
+
+
+# -- checkpoint durability + failure surfacing (crash-drill satellites) ------
+def _state():
+    return {"params": {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}}
+
+
+@pytest.fixture
+def _arm(monkeypatch):
+    """Arm a REPRO_FAULT_PLAN for the test and disarm after."""
+    from repro.runtime import health
+
+    def arm(plan):
+        monkeypatch.setenv("REPRO_FAULT_PLAN", plan)
+        health.reset_faults()
+    yield arm
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    health.reset_faults()
+
+
+def test_checkpoint_async_save_error_surfaced_on_wait(tmp_path, _arm):
+    from repro.ckpt.checkpoint import CheckpointError
+    _arm("ckpt.write:0:raise")
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=False)   # daemon thread fails silently...
+    with pytest.raises(CheckpointError):
+        ck.wait()                          # ...until here
+    st = ck.stats()
+    assert st["save_errors"] == 1 and st["saves"] == 0
+    # fault plan is hit 0 only: the retry lands and stats reflect it
+    ck.save(2, _state(), blocking=True)
+    assert ck.latest_step() == 2 and ck.stats()["saves"] == 1
+
+
+def test_checkpoint_async_save_error_surfaced_on_next_save(tmp_path, _arm):
+    from repro.ckpt.checkpoint import CheckpointError
+    _arm("ckpt.write:0:raise")
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=False)
+    with pytest.raises(CheckpointError):
+        ck.save(2, _state(), blocking=True)  # save() waits first -> raises
+    ck.save(3, _state(), blocking=True)      # error consumed, not sticky
+    assert ck.latest_step() == 3
+
+
+def test_checkpoint_midwrite_fault_keeps_previous_step(tmp_path, _arm):
+    """Kill/fault between payload-durable and publish: the previous step
+    and LATEST stay intact, residue is swept by the next save."""
+    from repro.ckpt.checkpoint import CheckpointError
+    _arm("ckpt.write:1:raise")
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), extras={"x": 1}, blocking=True)     # hit 0: clean
+    with pytest.raises(CheckpointError):
+        ck.save(2, _state(), extras={"x": 2}, blocking=True)  # hit 1: fault
+    assert ck.latest_step() == 1
+    step, _, extras = ck.restore(
+        {"params": jax.eval_shape(lambda: _state()["params"])})
+    assert step == 1 and extras["x"] == 1
+    # the aborted write leaves step_*.tmp evidence; the next save's GC
+    # sweeps it and publishing resumes normally
+    assert any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    ck.save(3, _state(), extras={"x": 3}, blocking=True)
+    assert not any(d.endswith((".tmp", ".trash"))
+                   for d in os.listdir(tmp_path))
+    assert ck.latest_step() == 3
+
+
+def test_checkpoint_resave_same_step_swaps_atomically(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, _state(), extras={"rev": 1}, blocking=True)
+    ck.save(7, _state(), extras={"rev": 2}, blocking=True)
+    assert ck.latest_step() == 7
+    assert ck.manifest()["extras"]["rev"] == 2
+    assert not any(d.endswith((".tmp", ".trash"))
+                   for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_latest_fallback_when_pointer_dangles(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    ck.save(2, _state(), blocking=True)
+    with open(os.path.join(tmp_path, "LATEST"), "w") as f:
+        f.write("step_00000099")        # kill inside the swap window
+    assert ck.latest_step() == 2        # newest complete step wins
+    os.remove(os.path.join(tmp_path, "step_00000002", "manifest.json"))
+    assert ck.latest_step() == 1        # incomplete steps don't count
+    assert ck.steps() == [1]

@@ -130,3 +130,54 @@ def test_serve_engine_greedy_generation():
     # greedy decode is deterministic
     out2 = engine.generate(prompts, max_new_tokens=4)
     np.testing.assert_array_equal(out, out2)
+
+
+def test_elastic_largest_grid_tie_breaking():
+    # equal used-device counts break toward the larger model dim (less
+    # activation memory per device, same throughput)
+    assert elastic.largest_grid(8, 16, (8, 4, 2, 1)) == (1, 8)
+    assert elastic.largest_grid(6, 4, (4, 2, 1)) == (3, 2)
+    assert elastic.largest_grid(4, 2, (2, 1)) == (2, 2)
+    # no divisor fits: fall back to pure data parallelism
+    assert elastic.largest_grid(5, 16, (16, 8, 4, 2)) == (5, 1)
+
+
+def test_elastic_degenerate_survivor_counts():
+    with pytest.raises(ValueError):
+        elastic.largest_grid(0, 16, (16, 8, 4, 2, 1))
+    with pytest.raises(ValueError):
+        elastic.largest_grid(-3, 16, (16, 8, 4, 2, 1))
+    with pytest.raises(ValueError):
+        elastic.plan_remesh([], params_shape=None)
+
+
+def test_checkpoint_restore_onto_remesh_shardings(tmp_path):
+    """Elastic restore: a snapshot written on one mesh loads bit-exactly
+    through plan_remesh target shardings (the Engine.restore path)."""
+    from repro.ckpt.checkpoint import Checkpointer
+    from repro.models import lm
+
+    cfg = configs.get_smoke("qwen3-1.7b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    cache = lm.init_cache(cfg, batch=2, max_len=16)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, {"params": params, "cache": cache}, blocking=True)
+
+    params_shape = jax.eval_shape(lambda: params)
+    cache_shape = jax.eval_shape(lambda: cache)
+    # inference restart: no optimizer state, but the KV cache reshards
+    plan = elastic.plan_remesh(jax.devices(), params_shape,
+                               cache_shape=cache_shape)
+    assert plan.opt_shardings is None
+    assert plan.cache_shardings is not None
+    step, state, _ = ck.restore(
+        {"params": params_shape, "cache": cache_shape},
+        shardings={"params": plan.param_shardings,
+                   "cache": plan.cache_shardings})
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(cache),
+                    jax.tree.leaves(state["cache"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
