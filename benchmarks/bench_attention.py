@@ -304,6 +304,43 @@ def _decode_cached_suite(rng) -> Dict:
     rows.append(int8_row)
     emit(f"attention/decode_int8_kv{kl8}", int8_row["us"],
          f"bytes={int8_row['traffic_bytes']}")
+
+    # ragged continuous batch (PR 8): one decode step serves four
+    # requests at different valid lengths — kv_len as a (B,) vector
+    # bands per row, so the step's modeled traffic is the sum of each
+    # request's own band, not rows x the batch max
+    kvs = list(c["kv_lens"])
+    nrows = len(kvs)
+    rcase = dict(b=nrows, hq=c["hq"], hkv=c["hkv"], sq=1,
+                 skv=c["max_len"], d=c["d"])
+    qr, kr, vr = _case_arrays(rcase, rng)
+    klv = jnp.asarray(kvs, jnp.int32)
+    gotr = decode(qr, kr, vr, klv)
+    wantr = ref.attention_ref(qr, kr, vr, causal=True, kv_len=klv)
+    errr = float(jnp.max(jnp.abs(gotr - wantr)))
+    assert errr < 3e-3, errr
+    jxr = jax.make_jaxpr(decode)(qr, kr, vr, klv)
+    rprob = AttentionProblem(bh=nrows * c["hq"], sq=1, skv=c["max_len"],
+                             d=c["d"], group=group, causal=True,
+                             window=None, dtype="float32", rows=nrows)
+    ragged_bytes = cost_model.attention_rows_traffic(
+        rprob, kvs, dspec).total
+    batchmax_bytes = cost_model.attention_rows_traffic(
+        rprob, [max(kvs)] * nrows, dspec).total
+    ragged_row = {
+        "name": "decode_ragged",
+        "pallas_calls": count_pallas_calls(jxr.jaxpr),
+        "traffic_bytes": ragged_bytes,
+        "traffic_bytes_batchmax": batchmax_bytes,
+        "us": round(time_fn(decode, qr, kr, vr, klv), 1),
+    }
+    assert ragged_row["pallas_calls"] == 1, ragged_row
+    # the continuous-batching claim: per-row banding beats billing the
+    # whole batch at the longest request's length
+    assert ragged_bytes < 0.75 * batchmax_bytes, ragged_row
+    rows.append(ragged_row)
+    emit("attention/decode_ragged", ragged_row["us"],
+         f"bytes={ragged_bytes} (batch-max model {batchmax_bytes})")
     return {"rows": rows}
 
 

@@ -18,7 +18,15 @@ tracked counter regresses:
                    refinements (the ``decode_kv*`` rows of
                    ``BENCH_attention.json`` make "decode traffic scales
                    with the valid KV length, not max_len" a gated
-                   invariant).
+                   invariant);
+  *occupancy*      the ``decode_kv<N>`` rows are additionally gated
+                   per request length as bytes-per-valid-KV-position:
+                   each length's occupancy must stay within tolerance
+                   of its baseline AND occupancy must not grow with N
+                   (per-row banding means longer requests amortize the
+                   fixed per-step overhead — a growing occupancy curve
+                   means decode traffic picked up a term that scales
+                   with the buffer instead of the request).
 
 Wall-clock fields (``*_us``) and ``meta`` blocks are ignored: interpret
 mode is a CPU proxy and CI machines are noisy; the tracked claims are
@@ -36,6 +44,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 import tempfile
 from typing import Dict, List, Tuple
@@ -115,6 +124,53 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
     return problems
 
 
+def _decode_occupancy(doc: dict) -> Dict[int, float]:
+    """{kv_len: traffic bytes per valid KV position} from the
+    ``decode_kv<N>`` rows of a BENCH_attention document."""
+    rows = (doc.get("decode_cached") or {}).get("rows", [])
+    out: Dict[int, float] = {}
+    for row in rows:
+        m = re.fullmatch(r"decode_kv(\d+)", str(row.get("name", "")))
+        if m and "traffic_bytes" in row:
+            kl = int(m.group(1))
+            out[kl] = row["traffic_bytes"] / kl
+    return out
+
+
+def occupancy_gate(baseline: dict, fresh: dict, tolerance: float,
+                   label: str) -> List[str]:
+    """Per-request-length decode occupancy gates (PR 8).
+
+    Continuous batching bills each request its own ``kv_valid`` band;
+    these gates pin that per length: (1) every baseline ``decode_kv<N>``
+    row's bytes/position stays within tolerance of its baseline, and
+    (2) occupancy is non-increasing in N — growth with the request
+    length means a buffer-sized (``max_len``) term leaked back into
+    the decode stream.
+    """
+    base = _decode_occupancy(baseline)
+    new = _decode_occupancy(fresh)
+    problems: List[str] = []
+    for kl, b_occ in sorted(base.items()):
+        if kl not in new:
+            problems.append(
+                f"{label}:occupancy[decode_kv{kl}]: missing from fresh run")
+            continue
+        if new[kl] > b_occ * (1.0 + tolerance):
+            problems.append(
+                f"{label}:occupancy[decode_kv{kl}]: {new[kl]:.1f} "
+                f"bytes/kv > baseline {b_occ:.1f} (+{tolerance:.0%} tol)")
+    lens = sorted(new)
+    for a, b in zip(lens, lens[1:]):
+        if new[b] > new[a] * 1.01:       # 1% float slack
+            problems.append(
+                f"{label}:occupancy: grows with request length "
+                f"(decode_kv{b} {new[b]:.1f} > decode_kv{a} "
+                f"{new[a]:.1f} bytes/kv) — a max_len-sized term is "
+                f"back in the decode stream")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -152,6 +208,8 @@ def main(argv=None) -> int:
         with open(fresh_path) as f:
             fresh = json.load(f)
         msgs = compare(baseline, fresh, args.tolerance, fname)
+        if fname == "BENCH_attention.json":
+            msgs += occupancy_gate(baseline, fresh, args.tolerance, fname)
         problems.extend(msgs)
         checked += 1
         print(f"# {fname}: "

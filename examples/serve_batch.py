@@ -5,9 +5,12 @@
 The paper is an inference paper, so the end-to-end example is serving:
 batched prompts -> prefill -> greedy decode through the KV-cached
 serve_step (the same function the decode_32k dry-run cells lower), now
-via the request lifecycle (submit -> serve) so the run ends with the
-engine's admission/degradation stats and health ledger.  Try a fault
-drill:
+via the handle/stream API (PR 8): ``submit`` returns a
+``RequestHandle``, the first request's tokens are *streamed* (each
+``next()`` steps the continuous scheduler), and ``drain`` finishes the
+rest — mixed prompt lengths welcome (``--ragged``).  The run ends with
+the engine's admission/degradation stats, scheduler occupancy and
+health ledger.  Try a fault drill:
 
     REPRO_FAULT_PLAN="serve.decode_step:3:raise" \
         PYTHONPATH=src python examples/serve_batch.py
@@ -44,6 +47,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--ragged", action="store_true",
+                    help="randomize prompt lengths (continuous "
+                         "scheduler demo)")
     ap.add_argument("--journal-dir", default=None,
                     help="journal requests (WAL) + snapshots here; "
                          "enables --resume after a kill")
@@ -70,23 +76,34 @@ def main() -> None:
         engine.serve(reqs)
     else:
         rng = np.random.default_rng(0)
-        prompts = rng.integers(
-            0, cfg.vocab_size,
-            (args.batch, args.prompt_len)).astype(np.int32)
-        reqs = [engine.submit(p, args.new_tokens) for p in prompts]
-        engine.serve(reqs)
+        lens = (rng.integers(1, args.prompt_len + 1, args.batch)
+                if args.ragged
+                else np.full(args.batch, args.prompt_len))
+        reqs = [engine.submit(
+                    rng.integers(0, cfg.vocab_size, int(n)).astype(
+                        np.int32),
+                    args.new_tokens)
+                for n in lens]
+        # stream the first handle token by token (each next() steps
+        # the scheduler), then drain the rest of the batch
+        print(f"  req{reqs[0].rid} streaming:", end="", flush=True)
+        for tok in reqs[0].tokens():
+            print(f" {tok}", end="", flush=True)
+        print()
+        engine.drain()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"batch={len(reqs)} prompt={args.prompt_len} "
+    print(f"batch={len(reqs)} prompt<={args.prompt_len} "
           f"new={args.new_tokens}: {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s incl. prefill+compile)")
     for r in reqs:
-        print(f"  req{r.rid} [{r.state.value}]: "
+        print(f"  req{r.rid} [{r.state.value}] prompt={len(r.prompt)}: "
               f"{r.out_tokens[:12]}...")
     stats = engine.stats()
     health = stats.pop("health")
     print(f"engine stats: {stats}")
     print(f"health: {health}")
+    print(f"scheduler: {engine.scheduler_report()}")
 
 
 if __name__ == "__main__":

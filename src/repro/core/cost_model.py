@@ -588,6 +588,42 @@ def attention_traffic(p: AttentionProblem, spec: DataflowSpec) -> Traffic:
                    feasible=foot <= spec.vmem_budget)
 
 
+def attention_rows_traffic(p: AttentionProblem, kv_lens,
+                           spec: DataflowSpec) -> Traffic:
+    """Per-row banded traffic for a ragged decode step (PR 8).
+
+    ``kv_lens`` holds one valid KV length per batch row of ``p``
+    (``len(kv_lens)`` rows sharing ``p.bh`` head-rows equally); each
+    row is charged the banded traffic of ITS OWN valid length — the
+    sum a continuous-batching step realizes — instead of charging
+    every row at the batch max.  A row at 0 moves nothing (its kernel
+    steps clamp onto the edge block and skip all compute).  The
+    per-row problems reuse :func:`attention_traffic`, so this stays a
+    pure aggregation of the one banding rule.
+    """
+    kv_lens = [int(kv) for kv in kv_lens]
+    rows = max(len(kv_lens), 1)
+    if p.bh % rows:
+        raise ValueError(f"bh={p.bh} not divisible by {rows} kv_lens rows")
+    heads = p.bh // rows
+    reads: Dict[Stationarity, int] = {IS: 0, WS: 0, OS: 0}
+    writes: Dict[Stationarity, int] = {IS: 0, WS: 0, OS: 0}
+    vmem_peak, feasible = 0, True
+    for kv in kv_lens:
+        if kv <= 0:
+            continue                       # empty row: no visited blocks
+        rp = dataclasses.replace(p, bh=heads, rows=1,
+                                 kv_len=min(kv, p.skv))
+        t = attention_traffic(rp, spec)
+        for st in (IS, WS, OS):
+            reads[st] += t.reads.get(st, 0)
+            writes[st] += t.writes.get(st, 0)
+        vmem_peak = max(vmem_peak, t.vmem_peak)
+        feasible &= t.feasible
+    return Traffic(reads=reads, writes=writes, vmem_peak=vmem_peak,
+                   feasible=feasible)
+
+
 def attention_time_estimate(
     p: AttentionProblem, spec: DataflowSpec, hw: HardwareSpec = V5E
 ) -> float:

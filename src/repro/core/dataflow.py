@@ -179,6 +179,84 @@ class DataflowSpec:
         )
 
 
+_ANCHOR_ALIASES = {
+    "os": Stationarity.OUTPUT, "output": Stationarity.OUTPUT,
+    "ws": Stationarity.WEIGHT, "weight": Stationarity.WEIGHT,
+    "is": Stationarity.INPUT, "input": Stationarity.INPUT,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecOverride:
+    """A partial per-call dataflow override for ``ops.*(spec=...)``.
+
+    One surface for all four subsystems (gemm / conv / binary /
+    attention): fields left ``None`` inherit from the autotuned spec
+    for the call's problem key, so ``SpecOverride(anchor=WS)`` forces
+    the anchor while keeping the autotuned blocking, and
+    ``SpecOverride(block=(None, 256))`` overrides one block dim only.
+    ``anchor`` accepts a :class:`Stationarity` or its short name
+    (``"os"`` / ``"ws"`` / ``"is"``).  For attention ``block`` is
+    ``(bq, bkv)``; the legacy per-field ``anchor``/``bq``/``bkv``
+    kwargs on ``ops.attention`` remain as aliases for one release.
+    Hashable (jit static arg), like :class:`DataflowSpec`.
+    """
+
+    anchor: Optional[Stationarity] = None
+    block: Optional[Tuple[Optional[int], ...]] = None
+
+    def __post_init__(self) -> None:
+        a = self.anchor
+        if isinstance(a, str) and not isinstance(a, Stationarity):
+            try:
+                a = _ANCHOR_ALIASES[a.lower()]
+            except KeyError:
+                raise ValueError(
+                    f"unknown anchor {self.anchor!r}; use one of "
+                    f"{sorted(_ANCHOR_ALIASES)} or a Stationarity"
+                ) from None
+            object.__setattr__(self, "anchor", a)
+        if self.block is not None:
+            object.__setattr__(self, "block", tuple(self.block))
+
+    @property
+    def anchor_name(self) -> Optional[str]:
+        if self.anchor is None:
+            return None
+        return {Stationarity.OUTPUT: "os", Stationarity.WEIGHT: "ws",
+                Stationarity.INPUT: "is"}[self.anchor]
+
+    def block_dim(self, idx: int) -> Optional[int]:
+        if self.block is None or idx >= len(self.block):
+            return None
+        return self.block[idx]
+
+    @property
+    def is_complete(self) -> bool:
+        """Every field pinned — the merge needs no autotuned base."""
+        return (self.anchor is not None and self.block is not None
+                and len(self.block) > 0
+                and all(b is not None for b in self.block))
+
+    def merge(self, base: "DataflowSpec") -> "DataflowSpec":
+        """The full spec this override realizes over ``base``.
+
+        An anchor change drops ``base``'s aux residencies (they were
+        chosen for the old anchor and may name the new one); a pure
+        block override keeps them.
+        """
+        anchor = self.anchor if self.anchor is not None else base.anchor
+        block = list(base.block)
+        if self.block is not None:
+            for i, bv in enumerate(self.block):
+                if bv is not None and i < len(block):
+                    block[i] = bv
+        if anchor == base.anchor:
+            return dataclasses.replace(base, block=tuple(block))
+        return DataflowSpec.basic(anchor, block=tuple(block),
+                                  vmem_budget=base.vmem_budget)
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmProblem:
     """Shape/dtype description of a GEMM-like workload: (M,K)x(K,N)->(M,N)."""
@@ -355,6 +433,13 @@ class AttentionProblem:
                  ``dtype`` (``"int8"`` for a quantized KV cache, which
                  adds per-position f32 scale reads and shrinks the KV
                  stream 2-4x).
+      rows     — per-row banding (PR 8): the number of batch rows the
+                 folded ``bh`` dim spans when each row carries its OWN
+                 traced valid KV length (a ragged continuous-batching
+                 decode step; ``kv_len`` stays ``None`` — the worst
+                 case keys the cache — and ``cost_model.
+                 attention_rows_traffic`` charges the realized per-row
+                 lengths).  ``rows == 1`` is the uniform batch.
 
     The anchor choice maps the paper's dataflows onto attention:
       OS — the output tile (a block of q rows) is anchored; online-
@@ -377,6 +462,7 @@ class AttentionProblem:
     dtype: str = "float32"
     kv_len: Optional[int] = None
     kv_dtype: Optional[str] = None
+    rows: int = 1
 
     def __post_init__(self) -> None:
         if self.bh % max(self.group, 1):
@@ -386,6 +472,10 @@ class AttentionProblem:
         if self.kv_len is not None and not 0 < self.kv_len <= self.skv:
             raise ValueError(
                 f"kv_len={self.kv_len} outside (0, skv={self.skv}]"
+            )
+        if self.rows < 1 or self.bh % self.rows:
+            raise ValueError(
+                f"bh={self.bh} not divisible by rows={self.rows}"
             )
 
     @property

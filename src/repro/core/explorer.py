@@ -523,14 +523,19 @@ register_problem(ProblemRegistration(
     problem_cls=AttentionProblem,
     # v5 appended the valid-KV-prefix (kl*) and KV-cache-dtype (kd*)
     # segments: both move the banded traffic ranking (kl bounds the
-    # visited blocks, kd the KV byte stream + scale reads).
+    # visited blocks, kd the KV byte stream + scale reads).  PR 8
+    # appends the ragged-rows segment (r*): a per-row-banded decode
+    # step (each batch row carrying its own traced kv_len) lowers
+    # with per-row index-map clamps, so its spec must not share a
+    # cache row with the uniform batch of the same folded shape.
     key_fields=lambda p: (str(p.bh), str(p.sq), str(p.skv), str(p.d),
                           str(p.group), f"c{int(p.causal)}",
                           "w-" if p.window is None else f"w{p.window}",
                           p.dtype,
                           "kl-" if p.kv_len is None else f"kl{p.kv_len}",
                           "kd-" if p.kv_dtype is None
-                          else f"kd{p.kv_dtype}"),
+                          else f"kd{p.kv_dtype}",
+                          f"r{p.rows}"),
     enumerate=enumerate_attention_candidates,
     time_estimate=cost_model.attention_time_estimate,
     vmem_footprint=cost_model.attention_vmem_footprint,

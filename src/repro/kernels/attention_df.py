@@ -34,6 +34,16 @@ excludes — in the *grid*, not just in the lanes:
     charges for.  The cost model and these index maps share one banding
     rule; keep them in sync.
 
+Per-row banding (PR 8): ``kv_len`` may be a per-batch-row ``(R,)``
+array — ``make_band_info`` then builds an ``(R, 2)`` info array and
+every index map / mask derives its row as ``b // (bh // R)``, so a
+ragged continuous-batching decode step bands each request at its own
+valid length in ONE dispatch.  ``paged_flash_attention`` extends the
+same scalar-prefetch trick to a paged KV cache: the per-row block
+table is part of the prefetch array and the KV index maps dereference
+it to translate logical blocks into physical page ids (a page table
+*is* an index map).
+
 int8 KV caches dequantize at the block load: K/V stream as int8 with
 per-position f32 scales (``k_scale``/``v_scale``, shape (BHkv, Skv, 1)),
 multiplied in-register after the VMEM fetch — the cache never
@@ -62,11 +72,17 @@ HUGE_WINDOW = 2 ** 30
 # Banding: the one rule deciding which KV blocks a q tile visits.
 # ---------------------------------------------------------------------------
 def make_band_info(kv_len, window, window_dyn, skv_valid: int) -> jax.Array:
-    """The (2,) int32 scalar-prefetch array: [valid KV length, window].
+    """The int32 scalar-prefetch array: ``[valid KV length, window]``.
 
     ``kv_len`` (traced or int) overrides the static true length
     ``skv_valid``; ``window_dyn`` (traced) overrides the static
     ``window``; no window at all encodes as ``HUGE_WINDOW``.
+
+    Shape contract (PR 8): a scalar ``kv_len`` yields the legacy
+    ``(2,)`` array; a *per-batch-row* ``kv_len`` of shape ``(R,)``
+    yields ``(R, 2)`` — one ``[kv_valid, window]`` pair per row — and
+    the kernels derive each grid step's row as ``b // (bh // R)`` to
+    band per row.  ``window``/``window_dyn`` broadcast across rows.
     """
     kv_valid = skv_valid if kv_len is None else kv_len
     if window_dyn is not None:
@@ -75,22 +91,50 @@ def make_band_info(kv_len, window, window_dyn, skv_valid: int) -> jax.Array:
         w = window
     else:
         w = HUGE_WINDOW
+    kv_valid = jnp.asarray(kv_valid, jnp.int32)
+    if kv_valid.ndim == 1:                  # ragged: one band per row
+        w = jnp.broadcast_to(jnp.asarray(w, jnp.int32).reshape(-1),
+                             kv_valid.shape)
+        return jnp.stack([kv_valid, w], axis=-1)
     return jnp.stack([
-        jnp.asarray(kv_valid, jnp.int32).reshape(()),
+        kv_valid.reshape(()),
         jnp.asarray(w, jnp.int32).reshape(()),
     ])
 
 
+def _info_pair(info, row):
+    """``(kv_valid, window)`` for batch row ``row`` of an info array in
+    either the legacy ``(2,)`` or the per-row ``(R, 2)`` shape."""
+    if len(info.shape) == 2:
+        return info[row, 0], info[row, 1]
+    return info[0], info[1]
+
+
+def _heads_per_row(bh: int, info: jax.Array) -> int:
+    """Head-rows per batch row for a per-row ``(R, 2)`` info array; 0
+    (the "no row mapping" sentinel) for the legacy ``(2,)`` shape."""
+    if info.ndim != 2:
+        return 0
+    rows = info.shape[0]
+    if bh % rows:
+        raise ValueError(
+            f"folded bh={bh} not divisible by {rows} per-row kv_len rows"
+        )
+    return bh // rows
+
+
 def _band_lo_hi(i, info, *, bq: int, bkv: int, sq: int, causal: bool,
-                windowed: bool):
-    """Traced [lo, hi] inclusive KV-block band for q tile ``i``.
+                windowed: bool, row=0):
+    """Traced [lo, hi] inclusive KV-block band for q tile ``i`` of batch
+    row ``row``.
 
     Mirrors ``cost_model.attention_band`` exactly (the cost model is the
     documented source of the rule): q rows right-align against the valid
     KV length, ``hi`` is clamped by the valid prefix and the causal
-    diagonal, ``lo`` by the sliding window.
+    diagonal, ``lo`` by the sliding window.  ``row`` indexes a per-row
+    ``(R, 2)`` info array (ignored for the legacy ``(2,)`` shape).
     """
-    kv_valid = info[0]
+    kv_valid, win = _info_pair(info, row)
     off = kv_valid - sq
     hi = jnp.maximum(0, (kv_valid + bkv - 1) // bkv - 1)
     if causal:
@@ -98,7 +142,7 @@ def _band_lo_hi(i, info, *, bq: int, bkv: int, sq: int, causal: bool,
         hi = jnp.minimum(hi, jnp.maximum(qmax, 0) // bkv)
     if windowed:
         qmin = i * bq + off
-        lo = jnp.maximum(0, (qmin - info[1] + 1) // bkv)
+        lo = jnp.maximum(0, (qmin - win + 1) // bkv)
         lo = jnp.minimum(lo, hi)
     else:
         lo = jnp.zeros_like(hi)
@@ -125,9 +169,9 @@ def static_band(gkv: int, skv_valid: int, bq: int, bkv: int,
 
 
 def _score_mask(i, jblk, info, *, bq: int, bkv: int, sq: int, causal: bool,
-                windowed: bool):
+                windowed: bool, row=0):
     """(bq, bkv) lane mask for q tile ``i`` against KV block ``jblk``."""
-    kv_valid = info[0]
+    kv_valid, win = _info_pair(info, row)
     off = kv_valid - sq
     qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + off
     kpos = jblk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
@@ -135,7 +179,7 @@ def _score_mask(i, jblk, info, *, bq: int, bkv: int, sq: int, causal: bool,
     if causal:
         mask &= kpos <= qpos
     if windowed:
-        mask &= kpos > qpos - info[1]
+        mask &= kpos > qpos - win
     return mask
 
 
@@ -155,7 +199,7 @@ def _load_kv(k_ref, v_ref, ks_ref, vs_ref):
 # ---------------------------------------------------------------------------
 def _flash_kernel(info_ref, *refs, bq: int, bkv: int, band: int,
                   scale: float, causal: bool, windowed: bool, sq: int,
-                  quant: bool):
+                  quant: bool, heads: int = 0):
     if quant:
         q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref \
             = refs
@@ -163,8 +207,11 @@ def _flash_kernel(info_ref, *refs, bq: int, bkv: int, band: int,
         q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
         ks_ref = vs_ref = None
     i, jr = pl.program_id(1), pl.program_id(2)
+    # per-row banding: grid dim 0 walks batch*heads; ``heads`` head-rows
+    # share each batch row's [kv_valid, window] pair (0 = legacy scalar)
+    row = pl.program_id(0) // heads if heads else 0
     lo, hi = _band_lo_hi(i, info_ref, bq=bq, bkv=bkv, sq=sq, causal=causal,
-                         windowed=windowed)
+                         windowed=windowed, row=row)
     jblk = jnp.minimum(lo + jr, hi)       # == the index-map fetch
 
     @pl.when(jr == 0)
@@ -179,7 +226,7 @@ def _flash_kernel(info_ref, *refs, bq: int, bkv: int, band: int,
         k, v = _load_kv(k_ref, v_ref, ks_ref, vs_ref)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         mask = _score_mask(i, jblk, info_ref, bq=bq, bkv=bkv, sq=sq,
-                           causal=causal, windowed=windowed)
+                           causal=causal, windowed=windowed, row=row)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[:, :1]                         # (bq, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -245,34 +292,37 @@ def flash_attention(
     quant = k_scale is not None
     band = static_band(gkv, skv_valid, bq, bkv, window, causal)
     info = make_band_info(kv_len, window, window_dyn, skv_valid)
+    heads = _heads_per_row(bh, info)
     bounds = dict(bq=bq, bkv=bkv, sq=sq_valid, causal=causal,
                   windowed=windowed)
 
-    def kv_block(i, jr, info_ref):
-        lo, hi = _band_lo_hi(i, info_ref, **bounds)
+    def kv_block(b, i, jr, info_ref):
+        lo, hi = _band_lo_hi(i, info_ref,
+                             row=b // heads if heads else 0, **bounds)
         return jnp.minimum(lo + jr, hi)
 
     kernel = functools.partial(
-        _flash_kernel, band=band, scale=scale, quant=quant, **bounds,
+        _flash_kernel, band=band, scale=scale, quant=quant, heads=heads,
+        **bounds,
     )
     in_specs = [
         pl.BlockSpec((1, bq, d), lambda b, i, jr, info: (b, i, 0)),
         pl.BlockSpec((1, bkv, d),
                      lambda b, i, jr, info, g=group:
-                     (b // g, kv_block(i, jr, info), 0)),
+                     (b // g, kv_block(b, i, jr, info), 0)),
         pl.BlockSpec((1, bkv, d),
                      lambda b, i, jr, info, g=group:
-                     (b // g, kv_block(i, jr, info), 0)),
+                     (b // g, kv_block(b, i, jr, info), 0)),
     ]
     args = [q, k, v]
     if quant:
         in_specs += [
             pl.BlockSpec((1, bkv, 1),
                          lambda b, i, jr, info, g=group:
-                         (b // g, kv_block(i, jr, info), 0)),
+                         (b // g, kv_block(b, i, jr, info), 0)),
             pl.BlockSpec((1, bkv, 1),
                          lambda b, i, jr, info, g=group:
-                         (b // g, kv_block(i, jr, info), 0)),
+                         (b // g, kv_block(b, i, jr, info), 0)),
         ]
         args += [k_scale, v_scale]
     return pl.pallas_call(
@@ -299,7 +349,8 @@ def flash_attention(
 # ---------------------------------------------------------------------------
 def _kv_stationary_kernel(info_ref, *refs, jk: Optional[int], bq: int,
                           bkv: int, scale: float, causal: bool,
-                          windowed: bool, sq: int, quant: bool):
+                          windowed: bool, sq: int, quant: bool,
+                          heads: int = 0):
     """One KV block's online-softmax update.
 
     ``jk=None``: single-dispatch form — the KV sweep is grid dim 1, the
@@ -327,8 +378,9 @@ def _kv_stationary_kernel(info_ref, *refs, jk: Optional[int], bq: int,
     else:
         jk_idx, iq = jk, pl.program_id(1)
 
+    row = pl.program_id(0) // heads if heads else 0
     bounds = dict(bq=bq, bkv=bkv, sq=sq, causal=causal, windowed=windowed)
-    lo, hi = _band_lo_hi(iq, info_ref, **bounds)
+    lo, hi = _band_lo_hi(iq, info_ref, row=row, **bounds)
     visible = (jk_idx >= lo) & (jk_idx <= hi)
 
     @pl.when(visible)
@@ -336,7 +388,7 @@ def _kv_stationary_kernel(info_ref, *refs, jk: Optional[int], bq: int,
         q = q_ref[0].astype(jnp.float32)
         k, v = _load_kv(k_ref, v_ref, ks_ref, vs_ref)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        mask = _score_mask(iq, jk_idx, info_ref, **bounds)
+        mask = _score_mask(iq, jk_idx, info_ref, row=row, **bounds)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_in[0][:, :1]
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -440,25 +492,26 @@ def kv_stationary_attention(
     quant = k_scale is not None
     gkv_v = max(1, min(gkv, -(-skv_valid // bkv)))  # statically-valid blocks
     info = make_band_info(kv_len, window, window_dyn, skv_valid)
+    heads = _heads_per_row(bh, info)
     kw = dict(bq=bq, bkv=bkv, scale=scale, causal=causal, windowed=windowed,
-              sq=sq_valid, quant=quant)
+              sq=sq_valid, quant=quant, heads=heads)
     out_shape = [
         jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
         jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
         jax.ShapeDtypeStruct((bh, sq, 128), jnp.float32),
     ]
 
-    def kv_clamp(j, info_ref):
+    def kv_clamp(b, j, info_ref):
         """Fetchable block for grid step ``j``: out-of-band steps alias
         the band's edge blocks — above the valid prefix AND below the
         global window start (tile 0's band) — so they re-use an
         adjacent step's index and issue no new DMA."""
-        hi = jnp.maximum(0, (info_ref[0] + bkv - 1) // bkv - 1)
+        kv_valid, win = _info_pair(info_ref, b // heads if heads else 0)
+        hi = jnp.maximum(0, (kv_valid + bkv - 1) // bkv - 1)
         lo = jnp.zeros_like(hi)
         if windowed:
-            off = info_ref[0] - sq_valid
-            lo = jnp.minimum(jnp.maximum(0, (off - info_ref[1] + 1) // bkv),
-                             hi)
+            off = kv_valid - sq_valid
+            lo = jnp.minimum(jnp.maximum(0, (off - win + 1) // bkv), hi)
         return jnp.clip(j, lo, hi)
 
     if interpret:
@@ -469,7 +522,7 @@ def kv_stationary_attention(
         kv_spec = pl.BlockSpec(
             (1, bkv, d),
             lambda b, j, i, info, g=group:
-            (b // g, kv_clamp(j, info), 0))
+            (b // g, kv_clamp(b, j, info), 0))
         in_specs = [
             pl.BlockSpec((1, bq, d), lambda b, j, i, info: (b, i, 0)),
             kv_spec, kv_spec,
@@ -479,7 +532,7 @@ def kv_stationary_attention(
             sc_spec = pl.BlockSpec(
                 (1, bkv, 1),
                 lambda b, j, i, info, g=group:
-                (b // g, kv_clamp(j, info), 0))
+                (b // g, kv_clamp(b, j, info), 0))
             in_specs += [sc_spec, sc_spec]
             args += [k_scale, v_scale]
         acc, m, l = pl.pallas_call(
@@ -507,7 +560,7 @@ def kv_stationary_attention(
             kv_spec = pl.BlockSpec(
                 (1, bkv, d),
                 lambda b, i, info, j=jk, g=group:
-                (b // g, kv_clamp(j, info), 0))
+                (b // g, kv_clamp(b, j, info), 0))
             in_specs = [
                 pl.BlockSpec((1, bq, d), lambda b, i, info: (b, i, 0)),
                 kv_spec, kv_spec,
@@ -518,7 +571,7 @@ def kv_stationary_attention(
                 sc_spec = pl.BlockSpec(
                     (1, bkv, 1),
                     lambda b, i, info, j=jk, g=group:
-                    (b // g, kv_clamp(j, info), 0))
+                    (b // g, kv_clamp(b, j, info), 0))
                 in_specs += [sc_spec, sc_spec]
                 args += [k_scale, v_scale]
                 n_in = 5
@@ -536,3 +589,144 @@ def kv_stationary_attention(
             )(info, *args, acc, m, l)
     lsafe = jnp.where(l[:, :, :1] == 0.0, 1.0, l[:, :, :1])
     return (acc / lsafe).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) decode attention: a page table IS an index map.
+# ---------------------------------------------------------------------------
+def _paged_kernel(info_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                  l_ref, *, page: int, band: int, scale: float, heads: int,
+                  window: Optional[int]):
+    b, jr = pl.program_id(0), pl.program_id(1)
+    row = b // heads
+    kv_valid = info_ref[row, 0]
+    hi = jnp.maximum(0, (kv_valid + page - 1) // page - 1)
+    if window is not None:
+        lo = jnp.minimum(jnp.maximum(0, (kv_valid - window) // page), hi)
+    else:
+        lo = jnp.zeros_like(hi)
+    jblk = jnp.minimum(lo + jr, hi)
+
+    @pl.when(jr == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when((lo + jr <= hi) & (kv_valid > 0))
+    def _update():
+        q = q_ref[0].astype(jnp.float32)                    # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (page, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = jblk * page + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page), 1)
+        mask = kpos < kv_valid          # decode q row == position kv_valid-1
+        if window is not None:
+            mask &= kpos > kv_valid - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jr == band - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_flash_attention(
+    q: jax.Array,             # (BH, 1, D)  folded rows*q_heads, decode
+    k_pages: jax.Array,       # (HKV, P, page, D) shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (R, max_pages) int32 page ids per row
+    kv_lens: jax.Array,       # (R,) int32 valid lengths per row
+    group: int = 1,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """OS-anchored decode attention over a paged KV cache.
+
+    The block indirection rides the same ``PrefetchScalarGridSpec``
+    machinery as the banded kernels — the scalar-prefetch array is
+    ``concat([kv_lens[:, None], block_tables], axis=1)`` and the KV
+    index maps dereference it twice: batch row ``b // heads`` selects
+    the row's band (exactly the per-row ``[kv_valid, window]`` clamp of
+    :func:`flash_attention`), then ``info[row, 1 + jblk]`` translates
+    the row's logical KV block into a physical page id.  A page table
+    *is* an index map: no gather materializes a contiguous cache, the
+    DMA engine walks the pool directly.
+
+    Each logical block spans exactly one page (``bkv == page``).  Steps
+    beyond a row's last valid page clamp onto it (a revisited page id —
+    no new DMA) and skip compute; a row at ``kv_len == 0`` dereferences
+    table slot 0 (tables must default to a valid id, 0 by convention)
+    and writes zeros.  Float pools only — the int8-KV scale sidecar
+    stays on the contiguous path.
+    """
+    bh, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged attention is decode-only (sq=1), got {sq}")
+    hkv, n_pages, page, _ = k_pages.shape
+    rows, max_pages = block_tables.shape
+    if bh % rows:
+        raise ValueError(f"bh={bh} not divisible by rows={rows}")
+    heads = bh // rows
+    if heads != hkv * group:
+        raise ValueError(
+            f"{heads} q heads per row != pool heads {hkv} * group {group}"
+        )
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    band = max(1, max_pages)
+    info = jnp.concatenate([
+        jnp.asarray(kv_lens, jnp.int32).reshape(rows, 1),
+        jnp.asarray(block_tables, jnp.int32).reshape(rows, max_pages),
+    ], axis=1)
+
+    def page_block(b, jr, info_ref):
+        row = b // heads
+        kv_valid = info_ref[row, 0]
+        hi = jnp.maximum(0, (kv_valid + page - 1) // page - 1)
+        if window is not None:
+            lo = jnp.minimum(jnp.maximum(0, (kv_valid - window) // page),
+                             hi)
+        else:
+            lo = jnp.zeros_like(hi)
+        jblk = jnp.minimum(lo + jr, hi)
+        return info_ref[row, 1 + jblk]          # page table -> index map
+
+    kv_spec = pl.BlockSpec(
+        (1, 1, page, d),
+        lambda b, jr, info, g=group:
+        ((b % heads) // g, page_block(b, jr, info), 0, 0))
+    kernel = functools.partial(
+        _paged_kernel, page=page, band=band, scale=scale, heads=heads,
+        window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bh, band),
+            in_specs=[
+                pl.BlockSpec((1, 1, d), lambda b, jr, info: (b, 0, 0)),
+                kv_spec, kv_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, d), lambda b, jr, info: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, d), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=interpret,
+    )(info, q, k_pages, v_pages)

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from repro.core import autotune, cost_model
 from repro.core.dataflow import (
     AttentionProblem, BinaryEpilogue, BinaryProblem, ConvProblem,
-    DataflowSpec, Epilogue, GemmProblem, Residency, IS, OS, WS,
+    DataflowSpec, Epilogue, GemmProblem, Residency, SpecOverride,
+    IS, OS, WS,
 )
 from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
 
@@ -63,6 +64,24 @@ def _pad_to(x: jax.Array, mults, value=0):
         pads.append((0, pad))
         needs |= pad > 0
     return jnp.pad(x, pads, constant_values=value) if needs else x
+
+
+def _resolve_spec(spec, problem, backend: str) -> DataflowSpec:
+    """Resolve a public op's ``spec`` argument to a full DataflowSpec.
+
+    ``None`` -> the autotuned spec for ``problem``.  A ``SpecOverride``
+    merges onto that autotuned base (a *complete* override — anchor and
+    every block dim pinned — skips the cache lookup and realizes over
+    the paper-default dataflow).  A full ``DataflowSpec`` passes
+    through untouched.
+    """
+    if isinstance(spec, SpecOverride):
+        if spec.is_complete:
+            return spec.merge(DataflowSpec.optimized())
+        return spec.merge(autotune.best_spec(problem, backend=backend))
+    if spec is None:
+        return autotune.best_spec(problem, backend=backend)
+    return spec
 
 
 def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype) -> GemmProblem:
@@ -154,10 +173,8 @@ def matmul(
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
         return _poison(ref.matmul_ref(a, b, out_dtype), fault)
-    if spec is None:
-        spec = autotune.best_spec(
-            _gemm_problem(m, k, n, a.dtype, out_dtype), backend=backend
-        )
+    spec = _resolve_spec(
+        spec, _gemm_problem(m, k, n, a.dtype, out_dtype), backend)
     bm, bk, bn = spec.block
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
@@ -201,7 +218,8 @@ def conv2d(
     backend = backend or ("pallas" if _on_tpu() else "xla")
     if backend == "xla":
         return _poison(ref.conv2d_ref(x, w, stride, out_dtype), fault)
-    if spec is None:
+    override = spec if isinstance(spec, SpecOverride) else None
+    if spec is None or override is not None:
         try:
             spec = autotune.best_spec(
                 _conv_problem(n, ih, iw, fh, fw, stride, cin, cout, x.dtype,
@@ -214,6 +232,9 @@ def conv2d(
             # large whole-resident image): fall back to the paper's
             # default dataflow under the keyword blocking
             spec = DataflowSpec.optimized()
+        if override is not None:
+            spec = override.merge(spec.with_block((b_oh, bc, bk)))
+            b_oh, bc, bk = spec.block
 
     xp, wp, oh_pad, b_oh_, bc_, bk_ = _conv_pad(
         x, w, stride, oh, ow, b_oh, bc, bk)
@@ -281,7 +302,8 @@ def conv2d_fused(
         scale=scale is not None,
         residual=residual is not None,
     )
-    if spec is None:
+    override = spec if isinstance(spec, SpecOverride) else None
+    if spec is None or override is not None:
         try:
             spec = autotune.best_spec(
                 _conv_problem(n, ih, iw, fh, fw, stride, cin, cout, x.dtype,
@@ -291,6 +313,9 @@ def conv2d_fused(
             b_oh, bc, bk = spec.block
         except ValueError:
             spec = DataflowSpec.optimized()  # see conv2d's fallback note
+        if override is not None:
+            spec = override.merge(spec.with_block((b_oh, bc, bk)))
+            b_oh, bc, bk = spec.block
     xp, wp, oh_pad, b_oh_, bc_, bk_ = _conv_pad(
         x, w, stride, oh, ow, b_oh, bc, bk)
     kpad = wp.shape[3]
@@ -346,12 +371,13 @@ def int8_conv2d_fused(
 
 def _attention_problem(bh: int, sq: int, skv: int, d: int, group: int,
                        causal: bool, window: Optional[int],
-                       dtype, kv_dtype=None) -> AttentionProblem:
+                       dtype, kv_dtype=None, rows: int = 1) -> AttentionProblem:
     dt = str(jnp.dtype(dtype))
     kdt = None if kv_dtype is None else str(jnp.dtype(kv_dtype))
     return AttentionProblem(
         bh=bh, sq=sq, skv=skv, d=d, group=group, causal=causal,
         window=window, dtype=dt, kv_dtype=None if kdt == dt else kdt,
+        rows=rows,
     )
 
 
@@ -395,7 +421,13 @@ def attention(
         are skipped — clamped index maps issue no DMA and ``pl.when``
         skips their compute — so a decode step's traffic scales with
         the *valid* cache length, not ``Skv``.  Traced lengths key the
-        autotune lookup as the full-``Skv`` worst case.
+        autotune lookup as the full-``Skv`` worst case.  A ``(B,)``
+        vector bands *per batch row* (PR 8): each row's grid steps
+        clamp onto its own band edge, so a ragged continuous batch
+        pays each request's true cache length.
+      * ``spec`` also accepts a partial :class:`SpecOverride`; its
+        anchor/block fields fill whichever of ``anchor``/``bq``/``bkv``
+        were not explicitly passed.
       * ``window`` (static) / ``window_dyn`` (traced) — causal sliding
         window; a static window additionally shrinks the KV grid
         dimension to the band width.
@@ -421,10 +453,28 @@ def attention(
             ref.attention_ref(q, k, v, causal=causal, window=win_eff,
                               scale=scale, kv_len=kv_len,
                               k_scale=k_scale, v_scale=v_scale), fault)
+    if isinstance(spec, SpecOverride):
+        # one-surface override (PR 8): unpack into the legacy per-field
+        # aliases; an explicitly-passed alias kwarg wins over the
+        # override's field
+        if spec.anchor not in (None, OS, WS):
+            raise ValueError(
+                f"attention admits OS/WS anchors, not {spec.anchor!r}"
+            )
+        anchor = anchor if anchor is not None else spec.anchor_name
+        bq = bq if bq is not None else spec.block_dim(0)
+        bkv = bkv if bkv is not None else spec.block_dim(1)
+        spec = None
+    ragged = getattr(kv_len, "ndim", 0) == 1
+    if ragged and kv_len.shape[0] != b:
+        raise ValueError(
+            f"per-row kv_len needs one entry per batch row "
+            f"({b}), got shape {kv_len.shape}"
+        )
     if spec is None and (anchor is None or bq is None or bkv is None):
         spec = autotune.best_spec(
             _attention_problem(b * hq, sq, skv, d, group, causal, window,
-                               q.dtype, k.dtype),
+                               q.dtype, k.dtype, rows=b if ragged else 1),
             backend=backend,
         )
     if spec is not None:
@@ -461,6 +511,53 @@ def attention(
     return _poison(out[:, :sq].reshape(b, hq, sq, d), fault)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("group", "scale", "window", "backend"),
+)
+def paged_attention(
+    q: jax.Array,             # (B, Hq, 1, D) decode queries
+    k_pages: jax.Array,       # (Hkv, n_pages, page, D) device page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages) int32 page ids (pad with 0)
+    kv_lens: jax.Array,       # (B,) int32 valid KV length per row
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    group: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Decode attention straight off a paged KV cache. Returns (B, Hq, 1, D).
+
+    The block-table indirection rides the kernel's scalar-prefetch index
+    map — a page table *is* an index map (see docs/serving.md) — so each
+    row's KV stream gathers its own pages with no contiguous copy, and
+    out-of-band grid steps clamp onto the band edge (no DMA, no
+    compute).  The xla/oracle path gathers pages into a contiguous
+    per-row cache and defers to ``ref.attention_ref`` with ragged
+    ``kv_len``.  Decode-only: ``Sq == 1``.
+    """
+    fault = _inject("kernel.attention")
+    b, hq, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged_attention is decode-only (Sq == 1), got {sq}")
+    hkv, _, page, _ = k_pages.shape
+    group = group or hq // hkv
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if backend == "xla":
+        kg = jnp.moveaxis(k_pages[:, block_tables], 1, 0).reshape(
+            b, hkv, -1, d)
+        vg = jnp.moveaxis(v_pages[:, block_tables], 1, 0).reshape(
+            b, hkv, -1, d)
+        return _poison(
+            ref.attention_ref(q, kg, vg, causal=True, window=window,
+                              scale=scale, kv_len=kv_lens), fault)
+    out = attention_df.paged_flash_attention(
+        q.reshape(b * hq, 1, d), k_pages, v_pages, block_tables, kv_lens,
+        group=group, scale=scale, window=window,
+        interpret=backend == "interpret",
+    )
+    return _poison(out.reshape(b, hq, 1, d), fault)
+
+
 def _binary_problem(m: int, kp: int, n: int, n_bits: int,
                     out_dtype="int32") -> BinaryProblem:
     return BinaryProblem(m=m, kp=kp, n=n, n_bits=n_bits,
@@ -489,10 +586,7 @@ def binary_matmul(
                        fault)
     m, kp = a_packed.shape
     n = b_packed.shape[1]
-    if spec is None:
-        spec = autotune.best_spec(
-            _binary_problem(m, kp, n, n_bits), backend=backend
-        )
+    spec = _resolve_spec(spec, _binary_problem(m, kp, n, n_bits), backend)
     bm, bkp, bn = spec.block
     ap = _pad_to(a_packed, (bm, bkp))
     bp = _pad_to(b_packed, (bkp, bn))
@@ -555,10 +649,8 @@ def binary_matmul_fused(
         residual=residual is not None, binarize=binarize,
     )
     out_dt = out_dtype or (jnp.int8 if binarize else jnp.float32)
-    if spec is None:
-        spec = autotune.best_spec(
-            _binary_problem(m, kp, n, n_bits, out_dt), backend=backend
-        )
+    spec = _resolve_spec(
+        spec, _binary_problem(m, kp, n, n_bits, out_dt), backend)
     bm, bkp, bn = spec.block
     ap = _pad_to(a_packed, (bm, bkp))
     bp = _pad_to(b_packed, (bkp, bn))
@@ -712,11 +804,9 @@ def matmul_fused(
         scale=scale is not None,
         residual=residual is not None,
     )
-    if spec is None:
-        spec = autotune.best_spec(
-            _gemm_problem(m, k, n, a.dtype, out_dtype or jnp.float32),
-            backend=backend,
-        )
+    spec = _resolve_spec(
+        spec, _gemm_problem(m, k, n, a.dtype, out_dtype or jnp.float32),
+        backend)
     bm, bk, bn = spec.block
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))

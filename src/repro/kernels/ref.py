@@ -157,14 +157,23 @@ def attention_ref(
         logits = logits * k_scale[..., 0][:, :, None, None, :]
     skv = k.shape[2]
     kv_valid = skv if kv_len is None else kv_len
-    qpos = jnp.arange(sq)[:, None] + (kv_valid - sq)  # right-aligned
-    kpos = jnp.arange(skv)[None, :]
-    mask = kpos < kv_valid
+    if getattr(kv_valid, "ndim", 0) == 1:
+        # per-batch-row valid lengths (ragged decode): (B, sq, skv) mask
+        kv_col = kv_valid[:, None, None]
+        qpos = jnp.arange(sq)[None, :, None] + (kv_col - sq)
+        kpos = jnp.arange(skv)[None, None, :]
+        mask = kpos < kv_col
+    else:
+        qpos = jnp.arange(sq)[:, None] + (kv_valid - sq)  # right-aligned
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos < kv_valid
     if causal:
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    mask = (mask[:, None, None] if mask.ndim == 3
+            else mask[None, None, None])
+    logits = jnp.where(mask, logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows
     if v_scale is not None:

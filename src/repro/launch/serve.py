@@ -1,8 +1,14 @@
-"""Serving launcher: batched greedy generation with the Engine.
+"""Serving launcher: continuous batched generation with the Engine.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+Requests go through the handle/stream API: ``submit()`` returns a
+``RequestHandle`` per prompt and ``drain()`` runs the continuous
+scheduler — mixed prompt lengths are fine (``--ragged`` randomizes
+them), short requests finish and free their slot while long ones keep
+decoding.
 
 Crash-safe serving: give it a journal directory and a snapshot cadence
 and every admission/token/terminal transition is journaled, with
@@ -35,6 +41,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ragged", action="store_true",
+                    help="randomize prompt lengths in [1, prompt-len] "
+                         "(exercises the continuous scheduler)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--journal-dir", default=None,
                     help="enable the durable request journal (WAL) + "
@@ -60,13 +69,18 @@ def main() -> None:
         print(f"resumed {len(reqs)} journaled request(s):")
     else:
         rng = np.random.default_rng(args.seed)
-        prompts = rng.integers(
-            0, cfg.vocab_size, (args.batch, args.prompt_len)
-        ).astype(np.int32)
-        reqs = [engine.submit(p, args.new_tokens) for p in prompts]
-        engine.serve(reqs)
+        lens = (rng.integers(1, args.prompt_len + 1, args.batch)
+                if args.ragged
+                else np.full(args.batch, args.prompt_len))
+        reqs = [engine.submit(
+                    rng.integers(0, cfg.vocab_size, int(n)).astype(
+                        np.int32),
+                    args.new_tokens)
+                for n in lens]
+        engine.drain()
     for r in reqs:
-        print(f"  req{r.rid} [{r.state.value}]: {r.out_tokens}")
+        print(f"  req{r.rid} [{r.state.value}] "
+              f"prompt={len(r.prompt)}: {r.out_tokens}")
     stats = engine.stats()
     print(f"engine: admitted={stats['admitted']} "
           f"completed={stats['completed']} retries={stats['retries']} "

@@ -152,8 +152,11 @@ def _plain_attention(q, k, v, mask_fn, scale, k_scale=None, v_scale=None):
     if k_scale is not None:
         logits = logits * k_scale[..., 0][:, :, None, None, :]
     mask = mask_fn(jnp.arange(sq), jnp.arange(skv))
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    # ragged mask_fns return (B, Sq, Skv) — one band per batch row
+    mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked row (kv_valid == 0)
     if v_scale is not None:
         p = p * v_scale[..., 0][:, :, None, None, :]
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
@@ -213,7 +216,9 @@ def _chunked_attention(q, k, v, mask_fn, scale, q_chunk: int = 512,
             kpos = j * kv_chunk + jnp.arange(kv_chunk)
             mask = mask_fn(qpos, kpos) & (kpos < skv)[None, :] \
                 & (qpos < sq)[:, None]
-            logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+            mask = (mask[:, None, None] if mask.ndim == 3
+                    else mask[None, None, None])
+            logits = jnp.where(mask, logits, -jnp.inf)
             m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
             m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
             p = jnp.exp(logits - m_safe)
@@ -278,8 +283,16 @@ def _attention_xla(q, k, v, scale, *, window=None, kv_len=None,
         return kref.banded_swa_attention_ref(q, k, v, int(window), scale)
     kv_valid = skv if kv_len is None else kv_len
     off = kv_valid - sq                       # right-align q rows
+    ragged = getattr(kv_len, "ndim", 0) == 1  # (B,) per-row valid length
 
     def mask_fn(qpos, kpos):
+        if ragged:
+            qp = qpos[None, :, None] + off[:, None, None]   # (B, Sq, 1)
+            kp = kpos[None, None, :]
+            m = (kp <= qp) & (kp < kv_valid[:, None, None])
+            if window is not None:
+                m &= kp > qp - window
+            return m                                        # (B, Sq, Skv)
         qp = (qpos + off)[:, None]
         kp = kpos[None, :]
         m = kp <= qp
@@ -294,6 +307,22 @@ def _attention_xla(q, k, v, scale, *, window=None, kv_len=None,
                                   k_scale=k_scale, v_scale=v_scale)
     return _plain_attention(q, k, v, mask_fn, scale,
                             k_scale=k_scale, v_scale=v_scale)
+
+
+def _cache_update(buf, val, idx):
+    """Write ``val`` into the position axis (2) of a KV-cache buffer.
+
+    A scalar ``idx`` writes every batch row at the same offset (the
+    batch-synchronous path); a ``(B,)`` vector writes each row at its
+    own offset — the ragged continuous-batching path, realized as a
+    per-row ``dynamic_update_slice`` under ``vmap``.
+    """
+    if getattr(idx, "ndim", 0) == 1:
+        return jax.vmap(
+            lambda b_, v_, i_: jax.lax.dynamic_update_slice_in_dim(
+                b_, v_, i_, axis=1)
+        )(buf, val, idx)
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, idx, axis=2)
 
 
 def _quantize_kv(x):
@@ -365,18 +394,12 @@ def attention_apply(
             v_store, v_scale = _quantize_kv(v)
         else:
             k_store, v_store = k.astype(ck.dtype), v.astype(cv.dtype)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            ck, k_store, cache_index, axis=2
-        )
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cv, v_store, cache_index, axis=2
-        )
+        ck = _cache_update(ck, k_store, cache_index)
+        cv = _cache_update(cv, v_store, cache_index)
         if int8_kv:
             cks, cvs = kv_cache[2], kv_cache[3]
-            cks = jax.lax.dynamic_update_slice_in_dim(
-                cks, k_scale, cache_index, axis=2)
-            cvs = jax.lax.dynamic_update_slice_in_dim(
-                cvs, v_scale, cache_index, axis=2)
+            cks = _cache_update(cks, k_scale, cache_index)
+            cvs = _cache_update(cvs, v_scale, cache_index)
             new_cache = (ck, cv, cks, cvs)
         else:
             new_cache = (ck, cv)

@@ -606,11 +606,17 @@ def decode_step(
 ) -> Tuple[jax.Array, Params]:
     """One decode step with the KV/SSM cache. Returns (logits (B, V), cache).
 
-    Uniform-position batch (all sequences share cache['index']).
+    ``cache['index']`` may be a scalar (uniform-position batch — every
+    sequence at the same depth) or a ``(B,)`` vector (ragged continuous
+    batch — each row decodes at its own depth; PR 8): positions, the
+    per-row cache writes, and the per-row attention bands all follow it.
     """
     x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
     idx = cache["index"]
-    positions = jnp.full((tokens.shape[0], 1), idx, jnp.int32)
+    if getattr(idx, "ndim", 0) == 1:
+        positions = idx[:, None]                           # (B, 1) ragged
+    else:
+        positions = jnp.full((tokens.shape[0], 1), idx, jnp.int32)
     windows = layer_windows(cfg)
     static_window = None
     if cfg.attn_window is not None and cfg.full_attn_every == 0:
@@ -733,6 +739,64 @@ def prefill(
         for k, v in new_layer_caches.items():
             cache[k] = v
     cache["index"] = jnp.asarray(s, jnp.int32)
+    x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x[:, -1])
+    return logits, cache
+
+
+def prefill_chunk(
+    params: Params,
+    cache: Params,
+    tokens: jax.Array,            # (B, S_chunk)
+    cfg,
+    start: jax.Array,             # scalar or (B,) filled-prefix offset
+    unroll: int = 1,
+) -> Tuple[jax.Array, Params]:
+    """Prefill one prompt chunk into an existing cache at ``start``.
+
+    The continuous scheduler's chunked-prefill step (PR 8): a long
+    prompt streams through in fixed-size chunks interleaved with decode
+    steps, bounding per-step latency for already-running requests.
+    Unlike ``prefill`` this attends over the *filled cache* (not the
+    local projections), so chunk N sees chunks 0..N-1; the attention
+    band follows ``kv_len = start + S_chunk`` per row.  Returns
+    (last-token logits (B, V), cache) — the logits are meaningful only
+    on the final chunk of a prompt.
+    """
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 1:
+        positions = start[:, None] + jnp.arange(s)[None, :]   # (B, S)
+    else:
+        positions = start + jnp.arange(s)[None, :]
+    windows = layer_windows(cfg)
+    static_window = None
+    if cfg.attn_window is not None and cfg.full_attn_every == 0:
+        windows = None
+        static_window = int(cfg.attn_window)
+
+    def body(x, scanned):
+        lp = scanned["lp"]
+        layer_cache = scanned["cache"]
+        window = scanned.get("window", static_window)
+        x, new_cache, _ = layer_apply(
+            lp, x, cfg, window=window, positions=positions,
+            cache=layer_cache, cache_index=start, enc_out=None, dist=None,
+        )
+        return x, new_cache
+
+    cache_keys = [k for k in ("k", "v", "k_scale", "v_scale", "ssm",
+                              "conv", "cross_k", "cross_v") if k in cache]
+    scanned = {"lp": params["layers"],
+               "cache": {k: cache[k] for k in cache_keys}}
+    if windows is not None:
+        scanned["window"] = windows
+    x, new_layer_caches = jax.lax.scan(body, x, scanned, unroll=unroll)
+    for k, v in new_layer_caches.items():
+        cache[k] = v
+    cache["index"] = start + s
     x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
     logits = layers.unembed(head, x[:, -1])

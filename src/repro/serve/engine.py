@@ -55,6 +55,29 @@ Crash safety (PR 7) extends no-request-*fails* to no-request-is-*lost*:
     a ``devices=`` survivor list and reshards the snapshot through
     ``runtime.elastic.plan_remesh``, so recovery works onto a smaller
     mesh than the one that crashed.
+
+Continuous batching (PR 8) lifts the equal-prompt-length restriction:
+
+  * ``submit()`` now returns a ``RequestHandle`` — still a ``Request``
+    (every existing call site keeps working) plus a ``tokens()``
+    stream iterator and a blocking ``result()``, both of which drive
+    the engine's continuous scheduler (``serve/scheduler.py``) one
+    step at a time;
+  * ``serve()`` on a mixed-prompt-length batch no longer raises — it
+    routes through the scheduler: per-step admission into a fixed pool
+    of cache slots, per-row banded decode (vector ``kv_len``), chunked
+    prefill interleaved with decode, and prefix-page reuse on the
+    shared ``PagedKVCache``.  Equal-length batches keep the original
+    batch-synchronous loop (and its snapshot/warm-resume path)
+    bit-for-bit;
+  * ``step()`` / ``drain()`` expose the scheduler directly;
+    ``generate()`` remains as a deprecated shim over submit + drain.
+  * crash safety composes: continuous serving journals the same
+    submit/serve/token/terminal records (``mode="continuous"``), and a
+    cold ``restore()`` replays the ragged batch through a fresh
+    scheduler — admission order, slot assignment and the fixed-shape
+    ragged cache are all deterministic, so recovered greedy streams
+    stay bit-identical (the ragged crash drill pins this).
 """
 from __future__ import annotations
 
@@ -62,7 +85,9 @@ import dataclasses
 import enum
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import (Any, Callable, Dict, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +98,8 @@ from repro.core import autotune, cost_model, explorer
 from repro.models import layers, lm
 from repro.runtime import elastic, health
 from repro.serve import journal as journal_lib
+from repro.serve.scheduler import (ContinuousScheduler, SamplingParams,
+                                   SchedulerConfig)
 
 health.register_site("snapshot.save")
 health.register_site("engine.restore")
@@ -149,13 +176,58 @@ class Request:
     degraded_steps: int = 0       # decode steps served on the XLA path
 
 
+@dataclasses.dataclass
+class RequestHandle(Request):
+    """What ``Engine.submit`` returns: a ``Request`` (so every existing
+    consumer of the request table keeps working) bound to its engine,
+    with a token-stream view over the continuous scheduler.
+
+    ``tokens()`` yields generated token ids as they land, stepping the
+    engine's scheduler whenever the stream runs dry; ``result()``
+    drains the stream and returns the full output (raising
+    ``StepFailed`` if the request ended FAILED).  Handles served
+    through the batch-synchronous ``Engine.serve`` path work too —
+    their tokens are already in ``out_tokens`` by the time the stream
+    is read.
+    """
+    sampling: Optional[SamplingParams] = None
+    engine: Optional["Engine"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def tokens(self) -> Iterator[int]:
+        i = 0
+        while True:
+            while i < len(self.out_tokens):
+                yield self.out_tokens[i]
+                i += 1
+            if _terminal(self.state):
+                return
+            if self.engine is None:
+                raise RuntimeError(
+                    f"request {self.rid} is detached from its engine "
+                    f"and not terminal; cannot stream")
+            self.engine.step()
+
+    def result(self) -> np.ndarray:
+        """Block until terminal; the generated tokens as (n,) int32."""
+        for _ in self.tokens():
+            pass
+        if self.state == RequestState.FAILED:
+            raise StepFailed(
+                f"request {self.rid} ended failed: {self.error}")
+        return np.asarray(self.out_tokens, np.int32)
+
+
 class Engine:
     """Batched serving loop with admission, degradation and retries.
 
-    Batches requests of equal prompt length (uniform-position cache),
-    prefills once, then steps the decode function; used by
-    examples/serve_batch.py.  ``generate`` keeps the original
-    prompts-in/tokens-out contract on top of ``submit`` + ``serve``.
+    Equal-prompt-length batches run the original batch-synchronous
+    loop (prefill once, decode until the last request finishes);
+    mixed-length batches — and the ``step()``/``drain()``/handle
+    streaming API — run the continuous scheduler: per-step admission
+    into cache slots, per-row banded decode, chunked prefill and
+    prefix-page reuse (``serve/scheduler.py``).  ``generate`` is kept
+    as a deprecated prompts-in/tokens-out shim over submit + drain.
 
     ``hw`` is the admission-control hardware model (VMEM feasibility of
     the decode-step attention); tests pass a tiny ``HardwareSpec`` to
@@ -171,7 +243,8 @@ class Engine:
                  validate_outputs: bool = True,
                  journal_dir: Optional[str] = None,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: Optional[int] = None):
+                 snapshot_every: Optional[int] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -215,7 +288,11 @@ class Engine:
         self._prefill_degraded = jax.jit(_prefill_xla)
         self._warmed = set()
         self._next_rid = 0
-        self._admission_cache: Dict[int, bool] = {}   # seq len -> feasible
+        self.scheduler_config = scheduler_config
+        self._scheduler: Optional[ContinuousScheduler] = None
+        self._backlog: List[RequestHandle] = []
+        # (seq len, kv reach) -> feasible
+        self._admission_cache: Dict[Tuple[int, int], bool] = {}
         self._counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "rejected": 0,
             "completed": 0, "failed": 0, "evicted": 0,
@@ -229,18 +306,28 @@ class Engine:
     # ------------------------------------------------------------------
     # Admission.
     # ------------------------------------------------------------------
-    def _attention_feasible(self, seq: int) -> bool:
+    def _attention_feasible(self, seq: int,
+                            cap: Optional[int] = None) -> bool:
         """Can every attention workload this request implies be realized
-        under ``self.hw``'s VMEM by at least one explorer candidate?"""
-        if seq in self._admission_cache:
-            return self._admission_cache[seq]
+        under ``self.hw``'s VMEM by at least one explorer candidate?
+
+        ``cap`` is the request's actual KV reach — ``prompt +
+        max_new_tokens``, clamped to capacity.  Probing at ``max_len``
+        regardless of the request's budget over-rejected short requests
+        on small-VMEM parts (a 10-token request was billed for a
+        2048-position decode it could never reach); the reach-aware
+        probe admits everything the request can actually touch.
+        """
+        cap = int(cap if cap is not None else self.max_len)
+        key = (seq, cap)
+        if key in self._admission_cache:
+            return self._admission_cache[key]
         ok = True
-        for p in lm.hot_attention_problems(self.cfg, 1, max(seq, 1),
-                                           self.max_len):
+        for p in lm.hot_attention_problems(self.cfg, 1, max(seq, 1), cap):
             if not explorer.enumerate_attention_candidates(p, self.hw):
                 ok = False
                 break
-        self._admission_cache[seq] = ok
+        self._admission_cache[key] = ok
         return ok
 
     def _reject(self, reason: str, exc_type=ValueError) -> None:
@@ -249,16 +336,30 @@ class Engine:
                           detail=reason)
         raise exc_type(reason)
 
-    def submit(self, prompt, max_new_tokens: int,
-               deadline_s: Optional[float] = None) -> Request:
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None
+               ) -> RequestHandle:
         """Validate and admit one request (state QUEUED), or raise.
+
+        Returns a ``RequestHandle``: stream its tokens with
+        ``handle.tokens()`` / ``handle.result()``, or pass it (with
+        others) to ``serve()`` / ``drain()``.  ``sampling`` bundles the
+        per-request settings (``SamplingParams``); the explicit
+        ``max_new_tokens`` / ``deadline_s`` arguments win over it.
 
         ``ValueError`` for malformed input (empty / over-``max_len`` /
         non-integer prompt, non-positive budget); ``AdmissionError``
         (a ``ValueError`` subclass) when the decode-step attention
-        cannot fit the hardware's VMEM under any dataflow.
+        cannot fit the hardware's VMEM under any dataflow at the
+        request's KV reach (``prompt + budget``, clamped to capacity).
         """
         self._counters["submitted"] += 1
+        if max_new_tokens is None:
+            max_new_tokens = (sampling.max_new_tokens if sampling
+                              is not None else 16)
+        if deadline_s is None and sampling is not None:
+            deadline_s = sampling.deadline_s
         prompt = np.asarray(prompt)
         if prompt.ndim != 1:
             self._reject(f"prompt must be rank-1 (one request), got "
@@ -276,11 +377,13 @@ class Engine:
         if max_new_tokens < 1:
             self._reject(f"max_new_tokens must be >= 1, got "
                          f"{max_new_tokens}")
-        if not self._attention_feasible(plen):
+        reach = min(plen + max_new_tokens, self.max_len)
+        if not self._attention_feasible(plen, reach):
             self._reject(
                 f"no VMEM-feasible attention dataflow for prompt length "
-                f"{plen} / max_len={self.max_len} on {self.hw.name} "
-                f"({self.hw.vmem_bytes} bytes VMEM)", AdmissionError)
+                f"{plen} / kv reach {reach} (max_len={self.max_len}) on "
+                f"{self.hw.name} ({self.hw.vmem_bytes} bytes VMEM)",
+                AdmissionError)
         budget = min(max_new_tokens, self.max_len - plen)
         if budget < max_new_tokens:
             self._counters["budget_clamped"] += 1
@@ -289,10 +392,12 @@ class Engine:
                 detail=f"budget clamped {max_new_tokens} -> {budget} "
                        f"(cache capacity max_len={self.max_len})")
         self._counters["admitted"] += 1
-        req = Request(prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=budget, deadline_s=deadline_s,
-                      rid=self._next_rid)
+        req = RequestHandle(prompt=np.asarray(prompt, np.int32),
+                            max_new_tokens=budget, deadline_s=deadline_s,
+                            rid=self._next_rid, sampling=sampling,
+                            engine=self)
         self._next_rid += 1
+        self._backlog.append(req)
         if self.journal is not None:
             # WAL contract: the caller is told "admitted" only after the
             # admission is durable, so a kill can never lose a request
@@ -387,10 +492,12 @@ class Engine:
               seed: int = 0) -> List[Request]:
         """Drive a batch of QUEUED requests to a terminal state.
 
-        Requests must share one prompt length (uniform-position cache).
-        Terminal states: DONE (budget reached), EVICTED (deadline),
-        FAILED (step failed beyond retries).  Returns the same request
-        objects for convenience.
+        Equal-prompt-length batches run the batch-synchronous loop
+        (uniform-position cache, snapshot-resumable); mixed-length
+        batches route through the continuous scheduler (per-row banded
+        cache, per-step admission).  Terminal states: DONE (budget
+        reached), EVICTED (deadline), FAILED (step failed beyond
+        retries).  Returns the same request objects for convenience.
 
         After ``restore()``, serving requests that include a recovered
         in-flight batch continues that batch from its restored decode
@@ -401,8 +508,10 @@ class Engine:
         skewed by a caller passing different sampling settings.
         """
         pending = self._take_resume(requests)
+        mode = "batch"
         if pending is not None:
             greedy, seed = pending["greedy"], pending["seed"]
+            mode = pending.get("mode", "batch")
             reqs = pending["reqs"]
             if pending["cache"] is not None:
                 # warm restart: decode continues on the snapshot cache
@@ -418,9 +527,10 @@ class Engine:
         if not reqs:
             return list(requests)
         lens = {int(r.prompt.shape[0]) for r in reqs}
-        if len(lens) != 1:
-            raise ValueError(
-                f"batch must share one prompt length, got {sorted(lens)}")
+        if len(lens) != 1 or mode == "continuous":
+            # mixed prompt lengths (or a continuous-mode cold replay):
+            # the continuous scheduler owns the batch
+            return self._serve_ragged(requests, reqs, greedy, seed)
         prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
         self._warm_autotune(prompts.shape[0], prompts.shape[1])
         t_start = time.monotonic()
@@ -450,6 +560,86 @@ class Engine:
         self._decode_loop(reqs, cache, logits, 0, t_start, greedy, seed)
         self._check_replay(requests)
         return list(requests)
+
+    def _serve_ragged(self, requests: Sequence[Request],
+                      reqs: List[Request], greedy: bool,
+                      seed: int) -> List[Request]:
+        """Drain a mixed-prompt-length batch through a dedicated
+        continuous scheduler.
+
+        A fresh scheduler per call: admission order (the given request
+        order), slot assignment and the fixed-shape ragged cache are
+        then pure functions of the batch, which is what lets a cold
+        journal replay of the same rids regenerate bit-identical
+        greedy streams (``_check_replay`` verifies)."""
+        self._live = None        # no snapshot point inside a ragged drain
+        if self.journal is not None:
+            self.journal.append(
+                "serve", fsync=True, rids=[r.rid for r in reqs],
+                seed=int(seed), greedy=bool(greedy), mode="continuous",
+                prompt_lens=[int(r.prompt.shape[0]) for r in reqs])
+        sched = ContinuousScheduler(self, self.scheduler_config)
+        for r in reqs:
+            sched.enqueue(r)
+        sched.drain(greedy=greedy, seed=seed)
+        self._last_sched_report = sched.report()
+        self._check_replay(requests)
+        return list(requests)
+
+    # ------------------------------------------------------------------
+    # Continuous stepping (the handle/stream API).
+    # ------------------------------------------------------------------
+    def _ensure_scheduler(self) -> ContinuousScheduler:
+        if self._scheduler is None:
+            self._scheduler = ContinuousScheduler(self,
+                                                  self.scheduler_config)
+        return self._scheduler
+
+    def _enqueue_backlog(self, sched: ContinuousScheduler) -> None:
+        """Hand submitted-but-unserved handles to the scheduler, in rid
+        (submission) order, journaling the in-flight set so a cold
+        replay can re-enqueue the identical batch."""
+        new = [r for r in self._backlog
+               if r.state == RequestState.QUEUED]
+        self._backlog = []
+        if not new:
+            return
+        if self.journal is not None:
+            live = {r.rid for r in new}
+            live.update(r.rid for r in sched.inflight()
+                        if not _terminal(r.state))
+            self.journal.append(
+                "serve", fsync=True, rids=sorted(live),
+                seed=int(sched.seed), greedy=bool(sched.greedy),
+                mode="continuous")
+        for r in new:
+            sched.enqueue(r)
+
+    def step(self) -> bool:
+        """One continuous-scheduler tick: admit at most one waiting
+        request (or push one prefill chunk), then run one decode step
+        over every occupied slot.  Returns True if any work was done.
+        Newly submitted handles are picked up automatically."""
+        sched = self._ensure_scheduler()
+        self._enqueue_backlog(sched)
+        self._live = None
+        return sched.step()
+
+    def drain(self, greedy: bool = True, seed: int = 0) -> None:
+        """Step the continuous scheduler until every submitted request
+        is terminal."""
+        sched = self._ensure_scheduler()
+        self._enqueue_backlog(sched)
+        self._live = None
+        sched.drain(greedy=greedy, seed=seed)
+
+    def scheduler_report(self) -> Optional[Dict[str, Any]]:
+        """Occupancy/paging counters: the persistent scheduler's if one
+        is live, else the last ragged ``serve()`` drain's (None before
+        any continuous serving)."""
+        if self._scheduler is not None:
+            return self._scheduler.report()
+        return getattr(self, "_last_sched_report", None)
 
     def _decode_loop(self, reqs: List[Request], cache, logits, step: int,
                      t_start: float, greedy: bool, seed: int) -> None:
@@ -783,6 +973,7 @@ class Engine:
                 "reqs": batch, "cache": None, "logits": None, "step": 0,
                 "greedy": bool(last.get("greedy", True)),
                 "seed": int(last.get("seed", 0)),
+                "mode": last.get("mode", "batch"),
             }
 
     def _take_resume(self, requests: Sequence[Request]):
@@ -833,11 +1024,22 @@ class Engine:
                  greedy: bool = True, seed: int = 0) -> np.ndarray:
         """prompts: (B, S) equal-length int32. Returns (B, new) tokens.
 
-        Back-compat wrapper over submit/serve: raises on any request
-        that does not finish DONE."""
+        .. deprecated:: PR 8
+           ``generate`` is a back-compat shim over ``submit`` +
+           ``drain``; use ``submit()`` and stream the returned
+           ``RequestHandle`` (``handle.tokens()`` / ``handle.result()``)
+           or batch with ``serve()``/``drain()`` directly.
+
+        Raises ``StepFailed`` on any request that does not finish DONE.
+        """
+        warnings.warn(
+            "Engine.generate() is deprecated; use Engine.submit() and "
+            "stream the RequestHandle (tokens()/result()), or "
+            "serve()/drain() for batches",
+            DeprecationWarning, stacklevel=2)
         prompts = np.asarray(prompts)
         reqs = [self.submit(p, max_new_tokens) for p in prompts]
-        self.serve(reqs, greedy=greedy, seed=seed)
+        self.drain(greedy=greedy, seed=seed)
         bad = [r for r in reqs if r.state != RequestState.DONE]
         if bad:
             r = bad[0]

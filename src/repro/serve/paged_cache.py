@@ -1,0 +1,230 @@
+"""Paged KV cache: block-table indirection over a shared page pool.
+
+The serving cache stops being one contiguous ``(B, max_len)`` strip per
+request and becomes a pool of fixed-size *pages* — ``(n_layers, n_kv,
+n_pages, page_size, d_head)`` for K and V — plus a per-request list of
+page ids.  A request's logical KV positions ``[0, kv_len)`` live in
+``pages[0], pages[1], ...`` in order; the last page may be partially
+filled (positions past ``kv_len`` are stale and masked by the per-row
+band, never read by compute).
+
+The point of the layout (the PR-8 tentpole): a page table *is* an
+index map.  ``ops.paged_attention`` feeds each request's page-id row
+through ``PrefetchScalarGridSpec`` — the kernel's KV index map reads
+``block_tables[row, j]`` to pick which pool page grid step ``j`` DMAs,
+so the gather from scattered pages into the systolic array is free; no
+host-side ``gather()`` materializes a contiguous view on the hot path.
+(``gather()`` below exists for the XLA fallback and for seeding a
+chunked prefill from reused prefix pages.)
+
+Sharing falls out of indirection: pages are refcounted, and full pages
+are registered in a prefix chain keyed ``(parent_key, token_chunk)``,
+so two prompts with a common prefix share the prefix's pages —
+``lookup_prefix`` returns the shared pages (incref'd) and how many
+positions they cover, and the scheduler only prefills the tail.  The
+chain key includes the parent, so a chunk match at position k implies
+the *entire* prefix up to k matched — no false sharing between prompts
+that agree on one middle chunk only.
+
+Bookkeeping (free list, refcounts, prefix chain) is host-side and O(1)
+per page; only the page payload lives on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pages_for(seq: int, page_size: int) -> int:
+    """Pages needed to hold ``seq`` KV positions (ceil division)."""
+    return max(0, -(-int(seq) // int(page_size)))
+
+
+class PagedKVCache:
+    """Refcounted page pool with prefix reuse for one model config.
+
+    ``cfg`` needs ``n_layers`` / ``n_kv_heads`` / ``d_head`` (any
+    attention ModelConfig).  The pool is allocated eagerly: K and V
+    pools of shape ``(n_layers, n_kv_heads, n_pages, page_size,
+    d_head)`` — the page axis is shared by every layer, so one page id
+    resolves the same positions in all layers and the per-request block
+    table stays a flat ``(max_pages,)`` int row.
+    """
+
+    def __init__(self, cfg, n_pages: int, page_size: int = 16,
+                 dtype="bfloat16"):
+        if n_pages < 1:
+            raise ValueError(f"need at least one page, got {n_pages}")
+        kv_dt = jnp.dtype(dtype if getattr(cfg, "kv_cache_dtype", "auto")
+                          in ("auto", None) else cfg.kv_cache_dtype)
+        shape = (cfg.n_layers, cfg.n_kv_heads, n_pages, page_size,
+                 cfg.d_head)
+        self.k_pages = jnp.zeros(shape, kv_dt)
+        self.v_pages = jnp.zeros(shape, kv_dt)
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.refs = np.zeros(n_pages, np.int32)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        # prefix chain: (parent_key, token_chunk) -> page id, and the
+        # inverse so a freed page drops its chain entry
+        self._prefix: Dict[Tuple, int] = {}
+        self._page_key: Dict[int, Tuple] = {}
+        self.stats: Dict[str, int] = {
+            "allocs": 0, "frees": 0, "reuse_hits": 0, "reuse_pages": 0,
+            "oom_rejects": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # Allocation.
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_admit(self, seq: int) -> bool:
+        """Could a ``seq``-position request be paged right now (ignoring
+        any prefix sharing it might get)?"""
+        return pages_for(seq, self.page_size) <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` fresh pages (ref=1 each), or None if the pool
+        cannot satisfy the request — the caller falls back to the
+        contiguous cache, it does not partially allocate."""
+        if n > len(self._free):
+            self.stats["oom_rejects"] += 1
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for pid in pages:
+            self.refs[pid] = 1
+        self.stats["allocs"] += n
+        return pages
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; refcount 0 returns the page to
+        the free list and retires its prefix-chain entry."""
+        for pid in pages:
+            self.refs[pid] -= 1
+            if self.refs[pid] <= 0:
+                self.refs[pid] = 0
+                key = self._page_key.pop(pid, None)
+                if key is not None:
+                    self._prefix.pop(key, None)
+                self._free.append(pid)
+                self.stats["frees"] += 1
+
+    # ------------------------------------------------------------------
+    # Prefix reuse.
+    # ------------------------------------------------------------------
+    def lookup_prefix(self, tokens) -> Tuple[List[int], int]:
+        """Longest already-resident full-page prefix of ``tokens``.
+
+        Returns ``(pages, covered)``: the shared pages *incref'd* (the
+        caller owns one reference and must ``release`` them with the
+        rest of the request's pages) and the number of positions they
+        hold.  Never covers the whole prompt — the final token must be
+        prefilled live so its logits exist — so ``covered`` stops at
+        the last full page strictly before ``len(tokens)``.
+        """
+        toks = [int(t) for t in tokens]
+        limit = (len(toks) - 1) // self.page_size * self.page_size
+        pages: List[int] = []
+        covered = 0
+        parent: Tuple = ()
+        while covered < limit:
+            key = (parent, tuple(toks[covered:covered + self.page_size]))
+            pid = self._prefix.get(key)
+            if pid is None:
+                break
+            pages.append(pid)
+            self.refs[pid] += 1
+            parent = key
+            covered += self.page_size
+        if pages:
+            self.stats["reuse_hits"] += 1
+            self.stats["reuse_pages"] += len(pages)
+        return pages, covered
+
+    def store(self, tokens, pages: Sequence[int], covered: int,
+              k_row, v_row) -> None:
+        """Write a request's freshly-prefilled KV into its new pages.
+
+        ``pages`` is the request's full page list (reused prefix first,
+        as returned by ``lookup_prefix`` + ``alloc``); positions below
+        ``covered`` are already resident and are not rewritten.
+        ``k_row`` / ``v_row`` are the request's contiguous KV,
+        ``(n_layers, n_kv_heads, >=plen, d_head)``.  Newly-stored *full*
+        pages are registered in the prefix chain for later sharing; a
+        partial tail page is private.
+        """
+        toks = [int(t) for t in tokens]
+        plen = len(toks)
+        ps = self.page_size
+        first_new = covered // ps
+        new_ids, chunks_k, chunks_v = [], [], []
+        for gi in range(first_new, pages_for(plen, ps)):
+            lo, hi = gi * ps, min((gi + 1) * ps, plen)
+            chunk_k = k_row[:, :, lo:hi]
+            chunk_v = v_row[:, :, lo:hi]
+            if hi - lo < ps:              # partial tail: pad with zeros
+                pad = [(0, 0), (0, 0), (0, ps - (hi - lo)), (0, 0)]
+                chunk_k = jnp.pad(chunk_k, pad)
+                chunk_v = jnp.pad(chunk_v, pad)
+            new_ids.append(pages[gi])
+            chunks_k.append(chunk_k)
+            chunks_v.append(chunk_v)
+        if new_ids:
+            idx = jnp.asarray(new_ids, jnp.int32)
+            self.k_pages = self.k_pages.at[:, :, idx].set(
+                jnp.stack(chunks_k, axis=2).astype(self.k_pages.dtype))
+            self.v_pages = self.v_pages.at[:, :, idx].set(
+                jnp.stack(chunks_v, axis=2).astype(self.v_pages.dtype))
+        # register full pages in the prefix chain, walking parents from
+        # the start so reused pages re-derive the same keys
+        parent: Tuple = ()
+        for gi in range(plen // ps):
+            key = (parent, tuple(toks[gi * ps:(gi + 1) * ps]))
+            pid = pages[gi]
+            if gi >= first_new and pid not in self._page_key \
+                    and key not in self._prefix:
+                self._prefix[key] = pid
+                self._page_key[pid] = key
+            parent = key
+
+    # ------------------------------------------------------------------
+    # Views.
+    # ------------------------------------------------------------------
+    def gather(self, pages: Sequence[int]):
+        """Contiguous ``(n_layers, n_kv_heads, len(pages)*page, d_head)``
+        K/V views of a request — the XLA-fallback / chunked-prefill
+        seed path.  The kernel path never calls this; it reads the pool
+        through the block-table index map."""
+        idx = jnp.asarray(list(pages), jnp.int32)
+        shp = self.k_pages.shape
+        k = self.k_pages[:, :, idx].reshape(
+            shp[0], shp[1], len(pages) * self.page_size, shp[4])
+        v = self.v_pages[:, :, idx].reshape(
+            shp[0], shp[1], len(pages) * self.page_size, shp[4])
+        return k, v
+
+    def block_table(self, pages: Sequence[int], max_pages: int):
+        """One request's ``(max_pages,)`` int32 block-table row, padded
+        with page 0 (padding is clamped out by the kernel's banded
+        index map, never dereferenced for compute)."""
+        row = np.zeros(max_pages, np.int32)
+        row[:len(pages)] = np.asarray(list(pages), np.int32)
+        return row
+
+    def block_tables(self, page_lists: Sequence[Sequence[int]]):
+        """Stacked ``(B, max_pages)`` table for a batch."""
+        mp = max(1, max((len(p) for p in page_lists), default=1))
+        return np.stack([self.block_table(p, mp) for p in page_lists])
+
+    def report(self) -> Dict[str, int]:
+        out = dict(self.stats)
+        out["pages_total"] = self.n_pages
+        out["pages_free"] = len(self._free)
+        out["pages_shared"] = int(np.sum(self.refs > 1))
+        return out

@@ -1,0 +1,445 @@
+"""Continuous-batching scheduler: per-step admit / prefill / decode.
+
+The batch-synchronous ``Engine.serve`` loop admits one equal-length
+batch, prefills it once, and decodes until the *last* request finishes
+— short requests ride along as dead rows and a new request waits for
+the whole batch to drain.  ``ContinuousScheduler`` replaces that with
+a slot machine over the ragged cache the PR-8 kernels understand:
+
+  * the KV cache keeps a fixed ``max_batch`` rows at ``max_len``
+    (fixed shapes -> one decode trace, bitwise-deterministic replay),
+    with a *vector* ``index`` — each row's filled length.  The decode
+    step bands attention per row (``kv_len`` as a scalar-prefetch
+    array), so a row at position 12 pays for 12 positions of KV
+    traffic while its neighbor sits at 1900;
+  * each ``step()`` admits at most one waiting request into a free
+    slot (whole-prompt prefill, or one chunk of a long prompt when
+    ``prefill_chunk`` is set — chunked prefill interleaves with decode
+    so running requests never stall behind a long prompt), then runs
+    one vectorized decode step for every occupied slot;
+  * requests finish (DONE / EVICTED / FAILED) individually: their slot
+    frees immediately and the next waiting request takes it on the
+    following step — no batch barrier;
+  * with a ``PagedKVCache`` attached, each admitted prompt's KV is
+    also scattered into refcounted pages and full-page prefixes are
+    shared across requests (``lookup_prefix``): a reused prefix skips
+    its share of prefill compute, and the pages double as the
+    block-table rows ``ops.paged_attention`` turns into kernel index
+    maps.
+
+Determinism contract (what the ragged crash drill pins): admission
+order is the enqueue order (rid order under ``Engine.drain``), slots
+are assigned lowest-free-first, prefill uses the engine's own jitted
+functions, and free slots' cache rows are reset to index 0 after every
+step — so a cold journal replay that re-enqueues the same rids walks
+the identical slot/batch evolution and regenerates bit-identical
+greedy tokens.
+
+Faults route through ``Engine._execute`` under the same
+``serve.prefill`` / ``serve.decode_step`` injection sites as the
+batch-synchronous loop, so every registered drill (degradation,
+retry, SIGKILL) exercises this loop unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, lm
+from repro.serve.paged_cache import PagedKVCache, pages_for
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling settings for the handle/stream API."""
+    max_new_tokens: int = 16
+    greedy: bool = True
+    seed: int = 0
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Continuous-batching knobs.
+
+    ``max_batch``     decode slots (cache rows) — fixed, so the decode
+                      trace never re-specializes as requests come/go.
+    ``prefill_chunk`` 0 prefills whole prompts in one shot (and reuses
+                      the engine's jitted prefill — bit-identical to
+                      the batch-sync loop); >0 streams prompts longer
+                      than the chunk through ``lm.prefill_chunk`` one
+                      chunk per step, interleaved with decode.
+    ``page_size`` / ``n_pages`` size the shared ``PagedKVCache``;
+                      ``n_pages=0`` sizes it to hold ``max_batch`` full
+                      ``max_len`` rows.  ``page_size=0`` disables
+                      paging (slot cache only).
+    ``prefix_reuse``  share full-page common prefixes across requests.
+    """
+    max_batch: int = 4
+    prefill_chunk: int = 0
+    page_size: int = 16
+    n_pages: int = 0
+    prefix_reuse: bool = True
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batching over one ``Engine``.
+
+    The scheduler borrows the engine's jitted prefill/decode functions,
+    degradation policy, journal and counters; it owns the waiting
+    queue, the slot table, the ragged cache and the page pool.
+    """
+
+    def __init__(self, engine, config: Optional[SchedulerConfig] = None):
+        from repro.serve import engine as engine_mod   # circular-safe
+        self._E = engine_mod
+        self.eng = engine
+        self.cc = config or SchedulerConfig()
+        if self.cc.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got "
+                             f"{self.cc.max_batch}")
+        self.waiting: deque = deque()
+        self.slots: List[Optional[Any]] = [None] * self.cc.max_batch
+        self.cache = None                      # ragged slot cache
+        self.last_tok = np.zeros(self.cc.max_batch, np.int64)
+        self.step_count = 0
+        self.greedy = True
+        self.seed = 0
+        self.t_start: Dict[int, float] = {}
+        self.req_pages: Dict[int, List[int]] = {}
+        self.paged: Optional[PagedKVCache] = None
+        self._pf: Optional[Tuple] = None       # chunked prefill in flight
+        self._chunk_fns: Dict[int, Tuple] = {} # chunk len -> jitted pair
+        cfg = engine.cfg
+        if self.cc.page_size and getattr(cfg, "has_attention", True) \
+                and getattr(cfg, "kv_cache_dtype", "auto") != "int8":
+            n_pages = self.cc.n_pages or (
+                self.cc.max_batch
+                * pages_for(engine.max_len, self.cc.page_size))
+            self.paged = PagedKVCache(cfg, n_pages, self.cc.page_size,
+                                      dtype=cfg.act_dtype)
+
+    # ------------------------------------------------------------------
+    # Queue.
+    # ------------------------------------------------------------------
+    def enqueue(self, req) -> None:
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self._pf is not None
+                    or any(r is not None for r in self.slots))
+
+    def inflight(self) -> List[Any]:
+        """Every request the scheduler currently owns (queued, mid-
+        prefill, or decoding)."""
+        out = [r for r in self.waiting]
+        if self._pf is not None:
+            out.append(self._pf[0])
+        out.extend(r for r in self.slots if r is not None)
+        return out
+
+    # ------------------------------------------------------------------
+    # The step: admit (one prefill unit) then decode (all slots).
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick; returns True if any work was done."""
+        did = self._admit()
+        did = self._decode() or did
+        return did
+
+    def drain(self, greedy: bool = True, seed: int = 0) -> None:
+        """Step until every owned request is terminal."""
+        self.greedy, self.seed = bool(greedy), int(seed)
+        while self.has_work:
+            if not self.step():
+                break                      # defensive: no progress
+        self.greedy, self.seed = True, 0
+
+    # -- admission ------------------------------------------------------
+    def _admit(self) -> bool:
+        if self._pf is not None:
+            return self._advance_chunked()
+        while self.waiting:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if not free:
+                return False
+            req = self.waiting.popleft()
+            if req.state != self._E.RequestState.QUEUED:
+                continue                   # served elsewhere / stale
+            self._ensure_cache()
+            self.t_start.setdefault(req.rid, time.monotonic())
+            plen = int(req.prompt.shape[0])
+            self.eng._warm_autotune(1, plen)
+            if self.cc.prefill_chunk and plen > self.cc.prefill_chunk:
+                self._pf = (req, None, 0)
+                return self._advance_chunked()
+            return self._prefill_whole(req, free[0])
+        return False
+
+    def _ensure_cache(self) -> None:
+        if self.cache is None:
+            self.cache = lm.init_cache(
+                self.eng.cfg, self.cc.max_batch, self.eng.max_len,
+                dtype=self.eng.cfg.act_dtype)
+            self.cache["index"] = jnp.zeros((self.cc.max_batch,),
+                                            jnp.int32)
+
+    def _prefill_whole(self, req, slot: int) -> bool:
+        """Single-shot prefill through the engine's own jitted function
+        (B=1), then install the row into ``slot``."""
+        RequestState = self._E.RequestState
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = len(prompt)
+        reuse, covered = [], 0
+        if self.paged is not None and self.cc.prefix_reuse:
+            reuse, covered = self.paged.lookup_prefix(prompt)
+        req.state = RequestState.PREFILLING
+        dev = jnp.asarray(prompt[None])
+        try:
+            if covered:
+                logits, rcache = self._prefill_from_pages(
+                    prompt, reuse, covered)
+            else:
+                logits, rcache, path = self.eng._execute(
+                    "serve.prefill", self.step_count,
+                    lambda: self.eng._prefill(self.eng.params, dev),
+                    lambda: self.eng._prefill_degraded(self.eng.params,
+                                                       dev))
+                if path == "degraded":
+                    self.eng._counters["degraded_steps"] += 1
+        except self._E.StepFailed as e:
+            self._fail(req, e)
+            if reuse:
+                self.paged.release(reuse)
+            return True
+        self._store_pages(req, prompt, reuse, covered, rcache)
+        self._install(req, slot, rcache, plen, logits[0])
+        return True
+
+    def _prefill_from_pages(self, prompt, reuse: List[int],
+                            covered: int):
+        """Seed a fresh cache row from reused prefix pages, then prefill
+        only the uncovered tail via ``lm.prefill_chunk``."""
+        kp, vp = self.paged.gather(reuse)     # (L, n_kv, covered.., Dh)
+        rcache = lm.init_cache(self.eng.cfg, 1, self.eng.max_len,
+                               dtype=self.eng.cfg.act_dtype)
+        rcache["k"] = rcache["k"].at[:, 0, :, :covered].set(
+            kp[:, :, :covered].astype(rcache["k"].dtype))
+        rcache["v"] = rcache["v"].at[:, 0, :, :covered].set(
+            vp[:, :, :covered].astype(rcache["v"].dtype))
+        rcache["index"] = jnp.asarray(covered, jnp.int32)
+        tail = jnp.asarray(np.asarray(prompt[covered:], np.int32)[None])
+        primary, degraded = self._chunk_fn(int(tail.shape[1]))
+        start = jnp.asarray(covered, jnp.int32)
+        logits, rcache, path = self.eng._execute(
+            "serve.prefill", self.step_count,
+            lambda: primary(self.eng.params, rcache, tail, start),
+            lambda: degraded(self.eng.params, rcache, tail, start))
+        if path == "degraded":
+            self.eng._counters["degraded_steps"] += 1
+        return logits, rcache
+
+    def _advance_chunked(self) -> bool:
+        """Push one chunk of the in-flight long prompt; on the final
+        chunk, install the finished row into a free slot."""
+        RequestState = self._E.RequestState
+        req, rcache, pos = self._pf
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = len(prompt)
+        end = min(pos + self.cc.prefill_chunk, plen)
+        toks = jnp.asarray(prompt[None, pos:end])
+        req.state = RequestState.PREFILLING
+        try:
+            if rcache is None:
+                rcache = lm.init_cache(self.eng.cfg, 1, self.eng.max_len,
+                                       dtype=self.eng.cfg.act_dtype)
+            primary, degraded = self._chunk_fn(int(toks.shape[1]))
+            start = jnp.asarray(pos, jnp.int32)
+            logits, rcache, path = self.eng._execute(
+                "serve.prefill", self.step_count,
+                lambda: primary(self.eng.params, rcache, toks, start),
+                lambda: degraded(self.eng.params, rcache, toks, start))
+            if path == "degraded":
+                self.eng._counters["degraded_steps"] += 1
+        except self._E.StepFailed as e:
+            self._pf = None
+            self._fail(req, e)
+            return True
+        if end < plen:
+            self._pf = (req, rcache, end)
+            return True
+        self._pf = None
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        self._store_pages(req, prompt, [], 0, rcache)
+        self._install(req, free[0], rcache, plen, logits[0])
+        return True
+
+    def _chunk_fn(self, chunk_len: int) -> Tuple:
+        """Jitted ``prefill_chunk`` (+ degraded XLA twin) per chunk
+        length; ``start`` is traced so one trace serves every offset."""
+        fns = self._chunk_fns.get(chunk_len)
+        if fns is not None:
+            return fns
+        cfg = self.eng.cfg
+
+        def _chunk(params, cache, toks, start):
+            return lm.prefill_chunk(params, cache, toks, cfg, start)
+
+        def _chunk_xla(params, cache, toks, start):
+            with layers.forced_backend("xla"):
+                return lm.prefill_chunk(params, cache, toks, cfg, start)
+
+        fns = (jax.jit(_chunk), jax.jit(_chunk_xla))
+        self._chunk_fns[chunk_len] = fns
+        return fns
+
+    def _store_pages(self, req, prompt, reuse: List[int], covered: int,
+                     rcache) -> None:
+        """Scatter the prefilled row into the page pool (best effort:
+        pool exhaustion falls back to slot-cache-only)."""
+        if self.paged is None or "k" not in rcache:
+            return
+        plen = len(prompt)
+        new = self.paged.alloc(
+            pages_for(plen, self.cc.page_size) - len(reuse))
+        if new is None:
+            if reuse:
+                self.paged.release(reuse)
+            return
+        pages = list(reuse) + new
+        self.paged.store(prompt, pages, covered,
+                         rcache["k"][:, 0], rcache["v"][:, 0])
+        self.req_pages[req.rid] = pages
+
+    def _install(self, req, slot: int, rcache, plen: int,
+                 first_logits) -> None:
+        """Copy the B=1 prefilled row into the slot cache and emit the
+        prompt's first generated token."""
+        for key, arr in self.cache.items():
+            if key == "index":
+                continue
+            self.cache[key] = arr.at[:, slot].set(
+                rcache[key][:, 0].astype(arr.dtype))
+        self.cache["index"] = self.cache["index"].at[slot].set(plen)
+        req.state = self._E.RequestState.DECODING
+        self.slots[slot] = req
+        self._emit(slot, first_logits)
+
+    # -- decode ---------------------------------------------------------
+    def _decode(self) -> bool:
+        RequestState = self._E.RequestState
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return False
+        now = time.monotonic()
+        evicted = False
+        for i in active:
+            r = self.slots[i]
+            dl = r.deadline_s
+            if dl is not None and now - self.t_start[r.rid] > dl:
+                r.state = RequestState.EVICTED
+                r.error = (f"deadline {dl:.3f}s exceeded after "
+                           f"{len(r.out_tokens)} tokens")
+                self.eng._counters["evicted"] += 1
+                self.eng.monitor.note("evicted", site="serve.decode_step",
+                                      step=self.step_count, detail=r.error)
+                self.eng._journal_terminal(r, self.step_count)
+                self._free_slot(i)
+                evicted = True
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return evicted
+        self.step_count += 1
+        toks = jnp.asarray(self.last_tok[:, None].astype(np.int32))
+        cache = self.cache
+        t0 = time.monotonic()
+        try:
+            logits, cache, path = self.eng._execute(
+                "serve.decode_step", self.step_count,
+                lambda: self.eng._decode(self.eng.params, cache, toks),
+                lambda: self.eng._decode_degraded(self.eng.params, cache,
+                                                  toks))
+        except self._E.StepFailed as e:
+            for i in active:
+                self._fail(self.slots[i], e)
+                self._free_slot(i)
+            return True
+        self.cache = cache
+        if path == "degraded":
+            self.eng._counters["degraded_steps"] += 1
+            for i in active:
+                self.slots[i].degraded_steps += 1
+        self.eng.monitor.record(self.step_count, time.monotonic() - t0)
+        logits_np = np.asarray(logits)
+        for i in active:
+            self._emit(i, logits_np[i])
+        # park freed rows at index 0 so the cache state is a pure
+        # function of the live requests (deterministic replay)
+        occupied = np.asarray(
+            [r is not None for r in self.slots], bool)
+        self.cache["index"] = jnp.where(
+            jnp.asarray(occupied), self.cache["index"], 0)
+        return True
+
+    def _emit(self, slot: int, logits_row) -> None:
+        """Sample one token for ``slot``, journal it, finish on budget."""
+        RequestState = self._E.RequestState
+        req = self.slots[slot]
+        sp = getattr(req, "sampling", None)
+        greedy = self.greedy if sp is None else sp.greedy
+        if greedy:
+            t = int(np.argmax(np.asarray(logits_row)))
+        else:
+            seed = self.seed if sp is None else sp.seed
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), req.rid),
+                len(req.out_tokens))
+            t = int(jax.random.categorical(
+                key, jnp.asarray(logits_row)))
+        req.out_tokens.append(t)
+        self.last_tok[slot] = t
+        if self.eng.journal is not None:
+            self.eng.journal.append("token", rid=req.rid,
+                                    step=len(req.out_tokens), token=t)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.state = RequestState.DONE
+            self.eng._counters["completed"] += 1
+            self.eng._journal_terminal(req, self.step_count)
+            self._free_slot(slot)
+
+    # -- bookkeeping ----------------------------------------------------
+    def _fail(self, req, err: BaseException) -> None:
+        req.state = self._E.RequestState.FAILED
+        req.error = str(err)
+        self.eng._counters["failed"] += 1
+        self.eng._journal_terminal(req, self.step_count)
+        pages = self.req_pages.pop(req.rid, None)
+        if pages is not None:
+            self.paged.release(pages)
+
+    def _free_slot(self, slot: int) -> None:
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self.last_tok[slot] = 0
+        self.t_start.pop(req.rid, None)
+        pages = self.req_pages.pop(req.rid, None)
+        if pages is not None:
+            self.paged.release(pages)
+
+    def report(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "steps": self.step_count,
+            "waiting": len(self.waiting),
+            "active": sum(r is not None for r in self.slots),
+            "max_batch": self.cc.max_batch,
+        }
+        if self.paged is not None:
+            out["pages"] = self.paged.report()
+        return out

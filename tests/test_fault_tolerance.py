@@ -209,13 +209,17 @@ def test_deadline_evicts_instead_of_stalling(served):
     assert eng.monitor.events_of("evicted")
 
 
-def test_mixed_length_batch_rejected(served):
+def test_mixed_length_batch_served_continuously(served):
+    # PR 8: mixed prompt lengths no longer raise — serve() routes the
+    # ragged batch through the continuous scheduler (per-row banding)
     params, prompts = served
     eng = Engine(CFG, params, max_len=MAX_LEN)
     r1 = eng.submit(np.zeros(8, np.int32), 2)
     r2 = eng.submit(np.zeros(9, np.int32), 2)
-    with pytest.raises(ValueError, match="prompt length"):
-        eng.serve([r1, r2])
+    eng.serve([r1, r2])
+    assert r1.state == RequestState.DONE and r2.state == RequestState.DONE
+    assert len(r1.out_tokens) == 2 and len(r2.out_tokens) == 2
+    assert eng.scheduler_report()["max_batch"] >= 1
 
 
 # ---------------------------------------------------------------------------

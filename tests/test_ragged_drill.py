@@ -1,0 +1,133 @@
+"""Ragged crash drill (PR 8): SIGKILL a continuous-batching drain
+mid-step, restart, and demand bit-identical recovery.
+
+The batch-synchronous crash drills (test_crash_recovery.py) pin the
+equal-length path; this drill pins the continuous path: a
+mixed-prompt-length batch routes through the scheduler (per-step
+admission, per-row banded decode), the journal records the drain in
+``mode="continuous"``, and a cold replay re-enqueues the same rids
+through a fresh scheduler.  Admission order, slot assignment and the
+fixed-shape ragged cache are deterministic, so the recovered greedy
+streams must equal the uninterrupted run's exactly.
+
+Run standalone (the crash-drill CI job's ragged-drill step):
+
+    PYTHONPATH=src python -m pytest -x -q tests/test_ragged_drill.py
+"""
+import json
+import os
+import random
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.serve.journal import RequestJournal
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAX_LEN = 48
+NEW_TOKENS = 5
+LENS = [7, 12, 2, 23]           # mixed: spans short/long, unaligned
+
+DRIVER = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    import jax
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine
+
+    mode, jdir, out = sys.argv[1], sys.argv[2], sys.argv[3]
+    cfg = configs.get_smoke("qwen3-1.7b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=%(max_len)d, journal_dir=jdir)
+    if mode == "resume":
+        reqs = eng.restore()
+        eng.serve(reqs)
+    else:
+        rng = np.random.default_rng(0)
+        lens = %(lens)r
+        prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+                   for n in lens]
+        reqs = [eng.submit(p, %(new_tokens)d) for p in prompts]
+        eng.serve(reqs)           # ragged: continuous scheduler
+    stats = {k: v for k, v in eng.stats().items() if isinstance(v, int)}
+    json.dump({"tokens": {str(r.rid): list(r.out_tokens) for r in reqs},
+               "states": {str(r.rid): r.state.value for r in reqs},
+               "stats": stats}, open(out, "w"))
+""" % {"max_len": MAX_LEN, "new_tokens": NEW_TOKENS, "lens": LENS})
+
+
+def _run_driver(script, mode, jdir, out, plan=None, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("REPRO_FAULT_PLAN", None)
+    if plan is not None:
+        env["REPRO_FAULT_PLAN"] = plan
+    return subprocess.run(
+        [sys.executable, script, mode, str(jdir), str(out)],
+        env=env, timeout=timeout,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+
+
+def _drill_seed():
+    return int(os.environ.get("REPRO_CRASH_DRILL_SEED", "0"))
+
+
+@pytest.fixture(scope="module")
+def base_tokens(tmp_path_factory):
+    """The uninterrupted ragged run, in its own process (same
+    environment as the drilled runs)."""
+    tmp = tmp_path_factory.mktemp("ragged-base")
+    script = tmp / "driver.py"
+    script.write_text(DRIVER)
+    out = tmp / "out.json"
+    proc = _run_driver(script, "run", tmp / "journal", out)
+    assert proc.returncode == 0, proc.stderr.decode()[-2000:]
+    result = json.load(open(out))
+    assert all(s == "done" for s in result["states"].values()), result
+    return {int(rid): toks for rid, toks in result["tokens"].items()}
+
+
+# decode mid-step and the journal-append window; hit ranges keep all
+# four submits durable but land inside the continuous drain
+RAGGED_KILL_SITES = [
+    ("serve.decode_step", (2, 6)),
+    ("journal.append", (10, 18)),
+]
+
+
+@pytest.mark.parametrize("site,hit_range", RAGGED_KILL_SITES,
+                         ids=[s for s, _ in RAGGED_KILL_SITES])
+def test_ragged_sigkill_then_restart_bit_exact(tmp_path, base_tokens,
+                                               site, hit_range):
+    rnd = random.Random(f"{_drill_seed()}|ragged|{site}")
+    hit = rnd.randint(*hit_range)
+    script = tmp_path / "driver.py"
+    script.write_text(DRIVER)
+    jdir = tmp_path / "journal"
+    out1, out2 = tmp_path / "out1.json", tmp_path / "out2.json"
+
+    proc = _run_driver(script, "run", jdir, out1,
+                       plan=f"{site}:{hit}:kill")
+    assert proc.returncode == -9, (site, hit, proc.stderr.decode()[-2000:])
+    assert not out1.exists()
+
+    j = RequestJournal(str(jdir))
+    recs = j.scan()
+    owed = sorted(r["rid"] for r in recs if r["kind"] == "submit")
+    serves = [r for r in recs if r.get("kind") == "serve"]
+    assert serves and serves[-1].get("mode") == "continuous", serves
+
+    proc = _run_driver(script, "resume", jdir, out2)
+    assert proc.returncode == 0, (site, hit, proc.stderr.decode()[-2000:])
+    result = json.load(open(out2))
+    got = {int(rid): toks for rid, toks in result["tokens"].items()}
+    assert sorted(got) == owed, (site, hit, result)
+    for rid in owed:
+        assert result["states"][str(rid)] == "done", (site, hit, result)
+        assert got[rid] == base_tokens[rid], (site, hit, result)
+    assert result["stats"]["failed"] == 0
+    assert result["stats"]["replay_divergence"] == 0
+    assert result["stats"]["replayed_steps"] >= 0
