@@ -52,6 +52,18 @@ def run() -> None:
     emit("fig8/resnet18_int8_best_vs_os_basic", 0.0,
          round(t_os / t_best, 2))
 
+    # sub-byte packed twin of the same stack: modeled weight-stream bytes
+    # (packed planes + outlier sidecar, kernels/pack.py) vs the int8 twin
+    int8_w = packed_w = 0
+    for ih, iw, f, s, cin, cout, rep in RESNET18:
+        mk = lambda wb: ConvProblem(
+            ih=ih, iw=iw, fh=f, fw=f, s=s, cin=cin, cout=cout,
+            in_dtype="int8", out_dtype="int32", weight_bits=wb).as_gemm()
+        int8_w += rep * cost_model.weight_stream_bytes(mk(None))
+        packed_w += rep * cost_model.weight_stream_bytes(mk(4))
+    emit("fig8/resnet18_weight_bytes_wb4_vs_int8", 0.0,
+         round(packed_w / int8_w, 3))
+
     # end-to-end planner (paper SIV-B/C): per-layer exploration + chain DP,
     # including the depthwise / shuffled-grouped networks from the paper's scope
     from repro.core import network

@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core.dataflow import DataflowSpec, IS, OS, WS
+from repro.core import cost_model
+from repro.core.dataflow import DataflowSpec, GemmProblem, IS, OS, WS
 from repro.core.jaxpr_utils import count_eqns, count_pallas_calls
-from repro.kernels import ops
+from repro.kernels import ops, pack
 from repro.kernels.matmul_df import matmul_df
 
 SHAPE = (256, 384, 512)
@@ -107,6 +108,53 @@ def run(out_path: str = OUT_PATH) -> Dict:
     results["ws_pallas_calls_by_gk"] = by_gk
     emit("fused/ws_single_dispatch", 0.0,
          "calls_by_gk=" + "/".join(f"{g}:{c}" for g, c in by_gk.items()))
+
+    # --- sub-byte packed weights (kernels/pack.py) ---------------------------
+    # Modeled weight-stream bytes for a decoder-MLP-shaped GEMM: the packed
+    # planes + outlier sidecar vs the int8 twin.  Deterministic cost-model
+    # output; check_regression.py gates the wb4/int8 ratio at <= 0.65.
+    pm, pk_, pn = 256, 2048, 2048
+    int8_twin = GemmProblem(m=pm, k=pk_, n=pn, in_dtype="int8",
+                            out_dtype="float32", acc_dtype="int32")
+    int8_bytes = cost_model.weight_stream_bytes(int8_twin)
+    wb_bytes = {
+        bits: cost_model.weight_stream_bytes(
+            GemmProblem(m=pm, k=pk_, n=pn, in_dtype="int8",
+                        out_dtype="float32", acc_dtype="int32",
+                        weight_bits=bits))
+        for bits in (4, 5)
+    }
+    traffic_row = {
+        "name": "weight_traffic_model",
+        "int8_weight_traffic_bytes": int8_bytes,
+        "wb4_weight_traffic_bytes": wb_bytes[4],
+        "wb5_weight_traffic_bytes": wb_bytes[5],
+        "wb4_to_int8_ratio": round(wb_bytes[4] / int8_bytes, 4),
+    }
+    emit("packed/weight_traffic_wb4_vs_int8", 0.0,
+         traffic_row["wb4_to_int8_ratio"])
+
+    # functional packed dispatch: one pallas_call, decompress in-kernel
+    q = jnp.asarray(rng.integers(-8, 8, size=(k, n)), jnp.int8)
+    wscale = jnp.full((1, n), 0.01, jnp.float32)
+    pw = pack.pack_int8(q, wscale, bits=4)
+    aq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    ws_spec = DataflowSpec.basic(WS, block=BLOCK)
+
+    def packed_call(x):
+        return ops.matmul_packed(x, pw, a_scale=jnp.float32(0.02),
+                                 spec=ws_spec, backend="interpret")
+
+    jx_p = jax.make_jaxpr(packed_call)(aq)
+    dispatch_row = {
+        "name": "packed_ws_dispatch",
+        "packed_pallas_calls": count_pallas_calls(jx_p.jaxpr),
+        "packed_us": round(time_fn(packed_call, aq), 1),
+    }
+    assert dispatch_row["packed_pallas_calls"] == 1, dispatch_row
+    results["packed"] = {"rows": [traffic_row, dispatch_row]}
+    emit("packed/ws_dispatch", dispatch_row["packed_us"],
+         f"calls={dispatch_row['packed_pallas_calls']}")
 
     try:
         with open(out_path, "w") as f:

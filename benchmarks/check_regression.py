@@ -19,6 +19,10 @@ tracked counter regresses:
                    ``BENCH_attention.json`` make "decode traffic scales
                    with the valid KV length, not max_len" a gated
                    invariant);
+  *packed ratio*   the ``BENCH_fused.json`` packed row is additionally
+                   gated as (wb4 packed weight bytes) / (int8 weight
+                   bytes) <= 0.65 — the sub-byte format must keep
+                   paying for itself against the int8 tier;
   *occupancy*      the ``decode_kv<N>`` rows are additionally gated
                    per request length as bytes-per-valid-KV-position:
                    each length's occupancy must stay within tolerance
@@ -171,6 +175,44 @@ def occupancy_gate(baseline: dict, fresh: dict, tolerance: float,
     return problems
 
 
+PACKED_RATIO_CAP = 0.65
+
+
+def packed_gate(baseline: dict, fresh: dict, tolerance: float,
+                label: str) -> List[str]:
+    """Packed weight-traffic gates (PR 9).
+
+    The sub-byte packed format must actually shrink the modeled weight
+    stream: (1) the fresh ``wb4`` packed-plane + outlier-sidecar bytes
+    must stay <= ``PACKED_RATIO_CAP`` x the int8 twin's bytes (hard cap
+    — format bloat, e.g. an oversized sidecar, trips it immediately),
+    and (2) the ratio must not regress past the committed baseline's by
+    more than the tolerance.
+    """
+    def ratio(doc: dict) -> float:
+        for row in (doc.get("packed") or {}).get("rows", []):
+            if row.get("name") == "weight_traffic_model":
+                return (row["wb4_weight_traffic_bytes"]
+                        / row["int8_weight_traffic_bytes"])
+        return float("nan")
+
+    new = ratio(fresh)
+    if new != new:  # NaN: row missing
+        return [f"{label}:packed: weight_traffic_model row missing "
+                f"from fresh run"]
+    problems: List[str] = []
+    if new > PACKED_RATIO_CAP:
+        problems.append(
+            f"{label}:packed: wb4/int8 weight-traffic ratio {new:.3f} "
+            f"> cap {PACKED_RATIO_CAP}")
+    base = ratio(baseline)
+    if base == base and new > base * (1.0 + tolerance):
+        problems.append(
+            f"{label}:packed: wb4/int8 ratio {new:.3f} > baseline "
+            f"{base:.3f} (+{tolerance:.0%} tol)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -210,6 +252,8 @@ def main(argv=None) -> int:
         msgs = compare(baseline, fresh, args.tolerance, fname)
         if fname == "BENCH_attention.json":
             msgs += occupancy_gate(baseline, fresh, args.tolerance, fname)
+        if fname == "BENCH_fused.json":
+            msgs += packed_gate(baseline, fresh, args.tolerance, fname)
         problems.extend(msgs)
         checked += 1
         print(f"# {fname}: "

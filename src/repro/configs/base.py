@@ -62,6 +62,12 @@ class ArchConfig:
     # packed weights + folded-BN fused epilogue (paper Fig. 9 workload
     # class, layers.binary_mlp_apply); requires d_model/d_ff % 32 == 0
     binary_mlp: bool = False
+    # decoder-layer MLPs store weights sub-byte packed (kernels/pack.py:
+    # int4/int5 nibble planes + MSR outlier sidecar) and run through
+    # ``ops.matmul_packed`` with in-register decompress at the stripe
+    # load (layers.packed_mlp_apply); mutually exclusive with binary_mlp
+    packed_weights: bool = False
+    packed_weight_bits: int = 4            # 4 or 5
 
     def __post_init__(self):
         if self.n_heads and self.n_kv_heads and self.n_heads % self.n_kv_heads:

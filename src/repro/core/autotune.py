@@ -58,7 +58,10 @@ gained the ``gemm`` segment) + attention keys (PR 4); 5 = attention
 keys gained the ``kv_len``/``kv_dtype`` segments alongside the banded
 (block-skipping) cost model and kernel lowerings (PR 5) — v4 attention
 rankings were computed under full-mask accounting, so every v4 entry
-is orphaned.
+is orphaned; 6 = GEMM/conv keys gained the ``wb<bits>`` packing segment
+alongside the sub-byte packed-weight datapath (PR 9) — the cost model
+now charges packed-plane + outlier-sidecar bytes for weight traffic,
+so v5 GEMM/conv rankings are stale and every v5 entry is orphaned.
 
 An optional *empirical refinement* pass (``refine=True``) re-ranks the
 analytical top-k by interpret-mode wall clock before caching, trading
@@ -86,7 +89,7 @@ from repro.core.dataflow import (
     registration_for,
 )
 
-CACHE_VERSION = 5
+CACHE_VERSION = 6
 
 # Any problem type carrying a ``core.dataflow`` registration resolves
 # here — deliberately not a closed Union, so onboarding a subsystem

@@ -179,6 +179,43 @@ def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
+# ---------------------------------------------------------------------------
+# Sub-byte packed weights (kernels/pack.py)
+#
+# Byte accounting mirrors the storage format exactly: a nibble plane of
+# ceil(k/8) int32 words per column, a 1-bit high plane (bits == 5 only) of
+# ceil(k/32) words per column, and an outlier sidecar of at most
+# ceil(3k/256) rows (MSR coding bounds the out-of-range rows; pack.py uses
+# the same capacity formula), each row one int32 index + n int32 deltas.
+# ---------------------------------------------------------------------------
+
+
+def packed_outlier_capacity(k: int) -> int:
+    """Worst-case outlier sidecar rows for a K-dim of ``k`` (matches pack.py)."""
+    return max(1, _ceil(3 * k, 256))
+
+
+def packed_slab_bytes(rows: int, cols: int, weight_bits: int) -> int:
+    """Bytes of the packed planes covering a ``rows x cols`` weight slab."""
+    bytes_ = _ceil(rows, 8) * cols * 4  # nibble plane, int32 words
+    if weight_bits == 5:
+        bytes_ += _ceil(rows, 32) * cols * 4  # high-bit plane
+    return bytes_
+
+
+def packed_weight_bytes(k: int, n: int, weight_bits: int) -> int:
+    """Total HBM bytes of a packed (k, n) weight: planes + outlier sidecar."""
+    cap = packed_outlier_capacity(k)
+    return packed_slab_bytes(k, n, weight_bits) + cap * (4 + n * 4)
+
+
+def weight_stream_bytes(p: GemmProblem) -> int:
+    """HBM bytes of one full fetch of the weight operand (packed-aware)."""
+    if p.weight_bits is None:
+        return p.k * p.n * dtype_bytes(p.in_dtype)
+    return packed_weight_bytes(p.k, p.n, p.weight_bits)
+
+
 def gemm_vmem_footprint(p: GemmProblem, spec: DataflowSpec) -> int:
     """Peak VMEM bytes claimed by the dataflow (double-buffered streams)."""
     bm, bk, bn = spec.block
@@ -194,11 +231,21 @@ def gemm_vmem_footprint(p: GemmProblem, spec: DataflowSpec) -> int:
         Residency.STRIPE: bm * p.k,
         Residency.WHOLE: p.m * p.k,
     }[res_a] * ib
-    foot += {
-        Residency.STREAMED: 2 * bk * bn,
-        Residency.STRIPE: p.k * bn,
-        Residency.WHOLE: p.k * p.n,
-    }[res_b] * ib
+    if p.weight_bits is None:
+        foot += {
+            Residency.STREAMED: 2 * bk * bn,
+            Residency.STRIPE: p.k * bn,
+            Residency.WHOLE: p.k * p.n,
+        }[res_b] * ib
+    else:
+        # packed planes resident per the dataflow, plus the transient
+        # decompressed int8 block materialized at the stripe load
+        foot += {
+            Residency.STREAMED: 2 * packed_slab_bytes(bk, bn, p.weight_bits),
+            Residency.STRIPE: packed_slab_bytes(p.k, bn, p.weight_bits),
+            Residency.WHOLE: packed_slab_bytes(p.k, p.n, p.weight_bits),
+        }[res_b]
+        foot += bk * bn  # int8 decompress scratch
     foot += {
         Residency.STREAMED: 2 * bm * bn,
         Residency.STRIPE: bm * p.n if spec.anchor == IS else p.m * bn,
@@ -230,7 +277,7 @@ def gemm_traffic(p: GemmProblem, spec: DataflowSpec) -> Traffic:
     bm, bk, bn = spec.block
     gm, gk, gn = _ceil(p.m, bm), _ceil(p.k, bk), _ceil(p.n, bn)
     ib, ob = dtype_bytes(p.in_dtype), dtype_bytes(p.out_dtype)
-    A, B, O = p.m * p.k * ib, p.k * p.n * ib, p.m * p.n * ob
+    A, B, O = p.m * p.k * ib, weight_stream_bytes(p), p.m * p.n * ob
 
     res_a, res_b, res_o = (
         spec.residency(IS), spec.residency(WS), spec.residency(OS)

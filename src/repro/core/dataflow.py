@@ -259,7 +259,14 @@ class SpecOverride:
 
 @dataclasses.dataclass(frozen=True)
 class GemmProblem:
-    """Shape/dtype description of a GEMM-like workload: (M,K)x(K,N)->(M,N)."""
+    """Shape/dtype description of a GEMM-like workload: (M,K)x(K,N)->(M,N).
+
+    ``weight_bits`` (None | 4 | 5) marks the B operand as sub-byte
+    packed (``kernels/pack.py`` planes + outlier sidecar): the cost
+    model then charges packed-byte weight traffic/footprints, and the
+    autotune key gains the packing segment so compressed and plain
+    variants of the same shape rank independently.
+    """
 
     m: int
     k: int
@@ -267,19 +274,25 @@ class GemmProblem:
     in_dtype: str = "bfloat16"
     out_dtype: str = "float32"
     acc_dtype: str = "float32"
+    weight_bits: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.weight_bits not in (None, 4, 5):
+            raise ValueError(
+                f"weight_bits must be None, 4 or 5, got {self.weight_bits}")
 
     @property
     def flops(self) -> int:
         return 2 * self.m * self.k * self.n
 
     def operand_bytes(self) -> Mapping[Stationarity, int]:
-        from repro.core.cost_model import dtype_bytes
+        from repro.core.cost_model import dtype_bytes, weight_stream_bytes
 
         ib = dtype_bytes(self.in_dtype)
         ob = dtype_bytes(self.out_dtype)
         return {
             IS: self.m * self.k * ib,
-            WS: self.k * self.n * ib,
+            WS: weight_stream_bytes(self),
             OS: self.m * self.n * ob,
         }
 
@@ -370,6 +383,12 @@ class ConvProblem:
     n: int = 1
     in_dtype: str = "int8"
     out_dtype: str = "int32"
+    weight_bits: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.weight_bits not in (None, 4, 5):
+            raise ValueError(
+                f"weight_bits must be None, 4 or 5, got {self.weight_bits}")
 
     @property
     def oh(self) -> int:
@@ -404,6 +423,7 @@ class ConvProblem:
             n=self.cout,
             in_dtype=self.in_dtype,
             out_dtype=self.out_dtype,
+            weight_bits=self.weight_bits,
         )
 
 

@@ -487,7 +487,9 @@ register_problem(ProblemRegistration(
     kind="gemm",
     problem_cls=GemmProblem,
     key_fields=lambda p: (str(p.m), str(p.k), str(p.n),
-                          p.in_dtype, p.out_dtype, p.acc_dtype),
+                          p.in_dtype, p.out_dtype, p.acc_dtype,
+                          "wb-" if p.weight_bits is None
+                          else f"wb{p.weight_bits}"),
     enumerate=enumerate_candidates,
     time_estimate=cost_model.gemm_time_estimate,
     vmem_footprint=cost_model.gemm_vmem_footprint,
@@ -499,7 +501,9 @@ register_problem(ProblemRegistration(
     problem_cls=ConvProblem,
     key_fields=lambda p: (str(p.n), str(p.ih), str(p.iw), str(p.fh),
                           str(p.fw), str(p.s), str(p.cin), str(p.cout),
-                          p.in_dtype, p.out_dtype),
+                          p.in_dtype, p.out_dtype,
+                          "wb-" if p.weight_bits is None
+                          else f"wb{p.weight_bits}"),
     enumerate=enumerate_conv_candidates,
     time_estimate=cost_model.conv_time_estimate,
     vmem_footprint=cost_model.conv_vmem_footprint,

@@ -1,0 +1,59 @@
+"""Shared symmetric int8 quantization — single source of truth.
+
+Every int8 tier in the codebase uses the same symmetric (zero-point
+free) scheme:
+
+    amax  = max(|x|)  over the reduction axes
+    scale = amax / 127        (1.0 where amax == 0, so dequant is exact)
+    q     = clip(round(x / scale), -127, 127)  as int8
+
+Until PR 9 three private copies of this lived in ``kernels/ref.py``
+(per-axis weight/activation quant), ``optim/compress.py`` (per-tensor
+gradient compression) and ``models/layers.py`` (per-position KV-cache
+quant); they are all thin wrappers over :func:`symmetric_int8` now.
+The sub-byte packed-weight tier (``kernels/pack.py``) builds on the
+same helper for its int8 pre-quantization.
+
+Numerical note: amax and the division are computed in float32.  For
+bfloat16/float16 inputs this matches the historical per-copy behaviour
+exactly — ``x / scale`` promoted to float32 anyway, and the low-to-high
+widening cast is value-preserving.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Axis = Union[None, int, Tuple[int, ...]]
+
+
+def symmetric_int8(
+    x: jax.Array, axis: Axis = None, keepdims: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization of ``x`` -> ``(q, scale)``.
+
+    ``axis=None`` quantizes per-tensor (scalar float32 scale); an int or
+    tuple axis reduces amax over those dims, keeping them as size-1 dims
+    when ``keepdims`` so the scale broadcasts back against ``q``.
+
+    Invariants (property-tested in tests/test_packed.py):
+      * all-zero reductions quantize to q == 0 with scale == 1.0 (no
+        divide-by-zero; dequantization is exact);
+      * ``|x - q * scale| <= scale / 2`` elementwise (round-trip bound),
+        since amax / scale == 127 never clips.
+    """
+    x32 = x.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x32))
+    else:
+        amax = jnp.max(jnp.abs(x32), axis=axis, keepdims=keepdims)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`symmetric_int8` up to the round-trip bound."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -50,7 +50,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dataflow import DataflowSpec, Epilogue, OS, WS, IS
-from repro.kernels.matmul_df import _apply_epilogue, _epi_operands, _read_epi
+from repro.kernels.matmul_df import (
+    _apply_epilogue, _epi_operands, _pop_packed, _read_epi,
+)
+from repro.kernels.pack import (
+    WORD_BITS as _PLANE_K,
+    WORD_NIBBLES as _PACK_K,
+    unpack_block as _unpack_block,
+)
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
@@ -69,7 +76,9 @@ def _strided_window(x, b_oh: int, ow: int, s: int):
 
 def _conv_kernel(x_ref, w_ref, *refs, fw: int, gc: int, bc: int, b_oh: int,
                  ow: int, s: int, n_r: int, tid: int,
-                 epi: Optional[Epilogue]):
+                 epi: Optional[Epilogue], wb: Optional[int] = None,
+                 has_comp: bool = False):
+    whi_ref, comp_ref, refs = _pop_packed(refs, wb, has_comp)
     o_ref, acc_ref = refs[-2], refs[-1]
     epi_refs = refs[:-2]
     t = pl.program_id(tid)
@@ -86,7 +95,16 @@ def _conv_kernel(x_ref, w_ref, *refs, fw: int, gc: int, bc: int, b_oh: int,
     xs = x_ref[0, pl.dslice(row0, b_oh * s), pl.dslice(kx, ow * s),
                pl.dslice(cb * bc, bc)]
     xs = _strided_window(xs, b_oh, ow, s)                      # (b_oh, ow, bc)
-    wv = w_ref[ky, kx, pl.dslice(cb * bc, bc), :]              # (bc, bk)
+    if wb is None:
+        wv = w_ref[ky, kx, pl.dslice(cb * bc, bc), :]          # (bc, bk)
+    else:  # packed planes: decompress the (bc, bk) slab in-register
+        rn = bc // _PACK_K
+        wp = w_ref[ky, kx, pl.dslice(cb * rn, rn), :]
+        hp = None
+        if whi_ref is not None:
+            rh = bc // _PLANE_K
+            hp = whi_ref[ky, kx, pl.dslice(cb * rh, rh), :]
+        wv = _unpack_block(wp, hp, wb, bc)
     part = jnp.dot(
         xs.reshape(b_oh * ow, bc), wv,
         preferred_element_type=acc_ref.dtype,
@@ -98,11 +116,14 @@ def _conv_kernel(x_ref, w_ref, *refs, fw: int, gc: int, bc: int, b_oh: int,
         # scale/bias blocks ((1, 1) / (1, bk)) broadcast over the
         # (b_oh, ow, bk) accumulator; the residual block matches the
         # output block and drops its leading batch dim
+        acc = acc_ref[...]
+        if comp_ref is not None:   # outlier taps land at the flush
+            acc = acc + comp_ref[0]
         scale, bias, residual = _read_epi(epi, epi_refs)
         if residual is not None:
             residual = residual[0]
         o_ref[0] = _apply_epilogue(
-            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+            epi, acc, scale, bias, residual, o_ref.dtype
         )
 
 
@@ -122,6 +143,9 @@ def conv2d_df(
     scale: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    weight_bits: Optional[int] = None,
+    w_hi: Optional[jax.Array] = None,
+    comp: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Direct conv under the given dataflow. Returns (N, oh, ow, K).
 
@@ -129,9 +153,33 @@ def conv2d_df(
     applied in-register before the output write: ``scale`` is (1, 1)
     (per-tensor) or (1, K) (per-output-channel) float32, ``bias`` is
     (1, K) float32, ``residual`` is (N, oh, ow, K).
+
+    With ``weight_bits`` set (4 or 5), ``w`` is the packed per-tap
+    nibble plane (fh, fw, C/8, K) int32 from ``kernels/pack.py``
+    (``w_hi`` the (fh, fw, C/32, K) bit plane at 5 bits); the kernel
+    decompresses each (bc, bk) weight slab in-register at the reduction
+    step.  ``comp`` is the optional (N, oh, ow, K) int32 outlier
+    compensation added to the accumulator at the epilogue flush.
     """
     n, ih_pad, iw_pad, c = x.shape
-    fh, fw, _, kout = w.shape
+    if weight_bits is None:
+        fh, fw, _, kout = w.shape
+    else:
+        if weight_bits not in (4, 5):
+            raise ValueError(f"weight_bits must be 4 or 5, got {weight_bits}")
+        if not jnp.issubdtype(x.dtype, jnp.integer):
+            raise ValueError(
+                f"packed weights need integer activations, got {x.dtype}")
+        fh, fw, cw, kout = w.shape
+        if cw * 8 != c:
+            raise ValueError(
+                f"nibble plane channels {cw}*8 != input channels {c}")
+        if bc % (32 if weight_bits == 5 else 8):
+            raise ValueError(
+                f"packed weight_bits={weight_bits} needs bc divisible by "
+                f"{32 if weight_bits == 5 else 8}, got {bc}")
+        if weight_bits == 5 and w_hi is None:
+            raise ValueError("weight_bits=5 needs the w_hi bit plane")
     if c % bc or kout % bk or oh % b_oh:
         raise ValueError(f"untileable: C={c} bc={bc} K={kout} bk={bk} "
                          f"oh={oh} b_oh={b_oh}")
@@ -139,6 +187,15 @@ def conv2d_df(
     n_r = fh * fw * gc
 
     epi = epilogue if (epilogue is not None and not epilogue.is_noop) else None
+    if comp is not None:
+        if weight_bits is None:
+            raise ValueError("comp is only meaningful with packed weights")
+        if epi is None:
+            raise ValueError(
+                "outlier compensation requires a fused epilogue flush")
+        if comp.shape != (n, oh, ow, kout):
+            raise ValueError(
+                f"comp shape {comp.shape} != ({n}, {oh}, {ow}, {kout})")
     if epi is not None:
         if epi.scale:
             if scale is None:
@@ -182,9 +239,19 @@ def conv2d_df(
 
     x_spec = pl.BlockSpec((1, ih_pad, iw_pad, c),
                           lambda *g: (bsel(g), 0, 0, 0))
-    w_spec = pl.BlockSpec((fh, fw, c, bk), lambda *g: (0, 0, 0, jsel(g)))
+    w_rows = c if weight_bits is None else c // _PACK_K
+    w_spec = pl.BlockSpec((fh, fw, w_rows, bk), lambda *g: (0, 0, 0, jsel(g)))
     o_spec = pl.BlockSpec((1, b_oh, ow, bk),
                           lambda *g: (bsel(g), tsel(g), 0, jsel(g)))
+    packed_args, packed_specs = [], []
+    if w_hi is not None:
+        packed_args.append(w_hi)
+        packed_specs.append(pl.BlockSpec(
+            (fh, fw, c // _PLANE_K, bk), lambda *g: (0, 0, 0, jsel(g))))
+    if comp is not None:
+        packed_args.append(comp)
+        packed_specs.append(pl.BlockSpec(
+            (1, b_oh, ow, bk), lambda *g: (bsel(g), tsel(g), 0, jsel(g))))
 
     epi_specs = []
     if epi is not None:
@@ -203,14 +270,15 @@ def conv2d_df(
 
     kernel = functools.partial(
         _conv_kernel, fw=fw, gc=gc, bc=bc, b_oh=b_oh, ow=ow, s=stride,
-        n_r=n_r, tid=tid, epi=epi,
+        n_r=n_r, tid=tid, epi=epi, wb=weight_bits,
+        has_comp=comp is not None,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, w_spec, *epi_specs],
+        in_specs=[x_spec, w_spec, *packed_specs, *epi_specs],
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, kout), out_dtype),
         scratch_shapes=[pltpu.VMEM((b_oh, ow, bk), _acc_dtype(x.dtype))],
         interpret=interpret,
-    )(x, w, *epi_args)
+    )(x, w, *packed_args, *epi_args)

@@ -57,7 +57,7 @@ interpret mode (tests/test_kernels_matmul, tests/test_fused_epilogue).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,11 +73,100 @@ from repro.core.dataflow import (
     OS,
     WS,
 )
+from repro.kernels.pack import (
+    WORD_BITS as _PLANE_K,
+    WORD_NIBBLES as _PACK_K,
+    unpack_block as _unpack_block,
+)
 from repro.kernels.ref import ACTIVATION_FNS as _ACT_FNS
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
     return jnp.int32 if jnp.issubdtype(in_dtype, jnp.integer) else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Packed sub-byte weights (kernels/pack.py planes).
+#
+# When ``weight_bits`` is set, the B operand is the packed nibble plane
+# (K/8, N) int32 — plus, at 5 bits, a (K/32, N) bit plane — and every
+# anchor decompresses the active block to int8 lanes in VMEM at the
+# load (``pack.unpack_block``) before the exact int8 dot.  The sparse
+# outlier sidecar arrives as a precomputed rank-R compensation term
+# ``comp = A[:, idx] @ delta`` (an (M, N) int32 operand blocked like the
+# output) added to the accumulator at the epilogue flush, so the raw
+# accumulator still never round-trips HBM.
+# ---------------------------------------------------------------------------
+class _Packed(NamedTuple):
+    bits: int                       # code width: 4 or 5
+    hi: Optional[jax.Array]         # (K/32, N) int32 bit plane (bits == 5)
+    comp: Optional[jax.Array]       # (M, N) int32 outlier compensation
+
+
+def _pop_packed(refs, wb: Optional[int], has_comp: bool):
+    """Peel the bit-plane / compensation refs off the kernel's varargs."""
+    bhi_ref = comp_ref = None
+    if wb == 5:
+        bhi_ref, refs = refs[0], refs[1:]
+    if has_comp:
+        comp_ref, refs = refs[0], refs[1:]
+    return bhi_ref, comp_ref, refs
+
+
+def _load_b(b_ref, bhi_ref, wb: Optional[int], b_res: Residency,
+            k=None, bk: Optional[int] = None, j=None,
+            bn: Optional[int] = None):
+    """Read the active B panel under any residency, decompressing packed
+    int32 words to int8 lanes in-register when ``wb`` is set."""
+    if wb is None:
+        b = b_ref[...]
+        if b_res == Residency.STRIPE:    # B block is (K, bn)
+            b = b_ref[pl.dslice(k * bk, bk), :]
+        elif b_res == Residency.WHOLE:   # B block is (K, N)
+            b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+        return b
+    if b_res == Residency.STRIPE:
+        rn, rh = bk // _PACK_K, bk // _PLANE_K
+        w = b_ref[pl.dslice(k * rn, rn), :]
+        h = bhi_ref[pl.dslice(k * rh, rh), :] if bhi_ref is not None else None
+        rows = bk
+    elif b_res == Residency.WHOLE:
+        rn, rh = bk // _PACK_K, bk // _PLANE_K
+        w = b_ref[pl.dslice(k * rn, rn), pl.dslice(j * bn, bn)]
+        h = (bhi_ref[pl.dslice(k * rh, rh), pl.dslice(j * bn, bn)]
+             if bhi_ref is not None else None)
+        rows = bk
+    else:
+        w = b_ref[...]
+        h = bhi_ref[...] if bhi_ref is not None else None
+        rows = w.shape[0] * _PACK_K
+    return _unpack_block(w, h, wb, rows)
+
+
+def _packed_operands(pk: Optional[_Packed], b_block, b_map,
+                     bm: int, bn: int, comp_map):
+    """Extra pallas operands + BlockSpecs for the packed planes.
+
+    The bit plane tiles exactly like the nibble plane with K rows
+    divided by the per-word code count; the compensation term is blocked
+    like the output."""
+    if pk is None:
+        return (), []
+    arrs, specs = [], []
+    if pk.hi is not None:
+        arrs.append(pk.hi)
+        specs.append(
+            pl.BlockSpec((b_block[0] // _PLANE_K, b_block[1]), b_map))
+    if pk.comp is not None:
+        arrs.append(pk.comp)
+        specs.append(pl.BlockSpec((bm, bn), comp_map))
+    return tuple(arrs), specs
+
+
+def _codes_block(pk: Optional[_Packed], b_block):
+    if pk is None:
+        return b_block
+    return (b_block[0] // _PACK_K, b_block[1])
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +259,9 @@ def _epi_specs(epi: Optional[Epilogue], scale, bm: int, bn: int,
 # OS-anchored kernels.
 # ---------------------------------------------------------------------------
 def _os_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
-               b_res: Residency, n_first: bool, epi: Optional[Epilogue]):
+               b_res: Residency, n_first: bool, epi: Optional[Epilogue],
+               wb: Optional[int] = None, has_comp: bool = False):
+    bhi_ref, comp_ref, refs = _pop_packed(refs, wb, has_comp)
     o_ref, acc_ref = refs[-2], refs[-1]
     epi_refs = refs[:-2]
     k = pl.program_id(2)
@@ -182,25 +273,23 @@ def _os_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
     a = a_ref[...]
     if a_stripe:  # A block is (bm, K): slice the active k panel
         a = a_ref[:, pl.dslice(k * bk, bk)]
-    b = b_ref[...]
-    if b_res == Residency.STRIPE:  # B block is (K, bn)
-        b = b_ref[pl.dslice(k * bk, bk), :]
-    elif b_res == Residency.WHOLE:  # B block is (K, N)
-        j = pl.program_id(0) if n_first else pl.program_id(1)
-        bn = acc_ref.shape[1]
-        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    j = pl.program_id(0) if n_first else pl.program_id(1)
+    b = _load_b(b_ref, bhi_ref, wb, b_res, k, bk, j, acc_ref.shape[1])
     acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == gk - 1)
     def _flush():
+        acc = acc_ref[...]
+        if comp_ref is not None:   # outlier rows land at the flush
+            acc = acc + comp_ref[...]
         scale, bias, residual = _read_epi(epi, epi_refs)
         o_ref[...] = _apply_epilogue(
-            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+            epi, acc, scale, bias, residual, o_ref.dtype
         )
 
 
 def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
-              epi, epi_args):
+              epi, epi_args, pk: Optional[_Packed] = None):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
@@ -247,9 +336,12 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         Residency.STREAMED: (bk, bn),
     }[res_b]
 
+    packed, packed_specs = _packed_operands(pk, b_block, b_map, bm, bn, o_map)
     kernel = functools.partial(
         _os_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=res_b,
         n_first=n_first, epi=epi,
+        wb=None if pk is None else pk.bits,
+        has_comp=pk is not None and pk.comp is not None,
     )
     scale = epi_args[0] if (epi is not None and epi.scale) else None
     return pl.pallas_call(
@@ -257,7 +349,8 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         grid=grid,
         in_specs=[
             pl.BlockSpec(a_block, a_map),
-            pl.BlockSpec(b_block, b_map),
+            pl.BlockSpec(_codes_block(pk, b_block), b_map),
+            *packed_specs,
             *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
                         (bm, bn), o_map),
         ],
@@ -265,7 +358,7 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
         interpret=interpret,
-    )(a, b, *epi_args)
+    )(a, b, *packed, *epi_args)
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +366,8 @@ def _build_os(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
 # ---------------------------------------------------------------------------
 def _rmw_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
                 b_res: Residency, m_minor: bool,
-                epi: Optional[Epilogue]):
+                epi: Optional[Epilogue], wb: Optional[int] = None,
+                has_comp: bool = False):
     """Accumulate A(i,:) @ B(:,j) across the in-grid reduction.
 
     Grid is (outer, inner, gk) with the reduction innermost; the output
@@ -281,6 +375,7 @@ def _rmw_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
     are consecutive and only the final visit — accumulated exactly in
     the VMEM scratch, post-epilogue — reaches HBM.
     """
+    bhi_ref, comp_ref, refs = _pop_packed(refs, wb, has_comp)
     o_ref, acc_ref = refs[-2], refs[-1]
     epi_refs = refs[:-2]
     k = pl.program_id(2)
@@ -296,24 +391,22 @@ def _rmw_kernel(a_ref, b_ref, *refs, gk: int, bk: int, a_stripe: bool,
     a = a_ref[...]
     if a_stripe:  # A block is (bm, K): slice the active k panel
         a = a_ref[:, pl.dslice(k * bk, bk)]
-    b = b_ref[...]
-    if b_res == Residency.STRIPE:   # B block is (K, bn)
-        b = b_ref[pl.dslice(k * bk, bk), :]
-    elif b_res == Residency.WHOLE:  # B (K, N) resident
-        bn = acc_ref.shape[1]
-        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    b = _load_b(b_ref, bhi_ref, wb, b_res, k, bk, j, acc_ref.shape[1])
     acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == gk - 1)
     def _flush():
+        acc = acc_ref[...]
+        if comp_ref is not None:   # outlier rows land at the flush
+            acc = acc + comp_ref[...]
         scale, bias, residual = _read_epi(epi, epi_refs)
         o_ref[...] = _apply_epilogue(
-            epi, acc_ref[...], scale, bias, residual, o_ref.dtype
+            epi, acc, scale, bias, residual, o_ref.dtype
         )
 
 
 def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
-               m_minor: bool, epi, epi_args):
+               m_minor: bool, epi, epi_args, pk: Optional[_Packed] = None):
     """Basic WS (m_minor=True) / IS (m_minor=False) with streamed outputs.
 
     One ``pallas_call`` regardless of the reduction depth: the k loop is
@@ -372,9 +465,12 @@ def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         i, _, _ = idx(g0, g1, g2)
         return (i, 0)
 
+    packed, packed_specs = _packed_operands(pk, b_block, b_map, bm, bn, o_map)
     kernel = functools.partial(
         _rmw_kernel, gk=gk, bk=bk, a_stripe=a_stripe, b_res=b_res,
         m_minor=m_minor, epi=epi,
+        wb=None if pk is None else pk.bits,
+        has_comp=pk is not None and pk.comp is not None,
     )
     scale = epi_args[0] if (epi is not None and epi.scale) else None
     return pl.pallas_call(
@@ -382,7 +478,8 @@ def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         grid=grid,
         in_specs=[
             pl.BlockSpec(a_block, a_map),
-            pl.BlockSpec(b_block, b_map),
+            pl.BlockSpec(_codes_block(pk, b_block), b_map),
+            *packed_specs,
             *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
                         (bm, bn), o_map),
         ],
@@ -390,14 +487,16 @@ def _build_rmw(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
         interpret=interpret,
-    )(a, b, *epi_args)
+    )(a, b, *packed, *epi_args)
 
 
 # ---------------------------------------------------------------------------
 # WS-anchored, output-stripe kernels.
 # ---------------------------------------------------------------------------
 def _ws_stripe_kernel(a_ref, b_ref, *refs, bm: int, gk: int,
-                      epi: Optional[Epilogue], use_acc: bool):
+                      epi: Optional[Epilogue], use_acc: bool,
+                      wb: Optional[int] = None, has_comp: bool = False):
+    bhi_ref, comp_ref, refs = _pop_packed(refs, wb, has_comp)
     if use_acc:   # exact accumulation in a scratch of the acc dtype
         o_ref, acc_ref = refs[-2], refs[-1]
         epi_refs = refs[:-2]
@@ -406,7 +505,8 @@ def _ws_stripe_kernel(a_ref, b_ref, *refs, bm: int, gk: int,
         epi_refs = refs[:-1]
     buf = acc_ref if use_acc else o_ref
     k, i = pl.program_id(1), pl.program_id(2)
-    part = jnp.dot(a_ref[...], b_ref[...],
+    part = jnp.dot(a_ref[...],
+                   _load_b(b_ref, bhi_ref, wb, Residency.STREAMED),
                    preferred_element_type=buf.dtype)
     sl = pl.dslice(i * bm, bm)
 
@@ -421,14 +521,17 @@ def _ws_stripe_kernel(a_ref, b_ref, *refs, bm: int, gk: int,
     if epi is not None:
         @pl.when(k == gk - 1)
         def _epilogue():
+            acc = buf[sl, :]
+            if comp_ref is not None:   # outlier rows land at the flush
+                acc = acc + comp_ref[...]
             scale, bias, residual = _read_epi(epi, epi_refs, res_rows=sl)
             o_ref[sl, :] = _apply_epilogue(
-                epi, buf[sl, :], scale, bias, residual, o_ref.dtype
+                epi, acc, scale, bias, residual, o_ref.dtype
             )
 
 
 def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
-              epi, epi_args):
+              epi, epi_args, pk: Optional[_Packed] = None):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
@@ -440,16 +543,23 @@ def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         # fused epilogues accumulate exactly in an int32 scratch stripe.
         use_acc = epi is not None and jnp.issubdtype(a.dtype, jnp.integer)
         kernel = functools.partial(_ws_stripe_kernel, bm=bm, gk=gk, epi=epi,
-                                   use_acc=use_acc)
+                                   use_acc=use_acc,
+                                   wb=None if pk is None else pk.bits,
+                                   has_comp=pk is not None
+                                   and pk.comp is not None)
+        b_map = lambda j, k, i: (k, j)
         j_map = lambda j, k, i: (0, j)
         i_map = lambda j, k, i: (i, 0)
+        packed, packed_specs = _packed_operands(
+            pk, (bk, bn), b_map, bm, bn, lambda j, k, i: (i, j))
         scale = epi_args[0] if (epi is not None and epi.scale) else None
         return pl.pallas_call(
             kernel,
             grid=(gn, gk, gm),
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda j, k, i: (i, k)),
-                pl.BlockSpec((bk, bn), lambda j, k, i: (k, j)),
+                pl.BlockSpec(_codes_block(pk, (bk, bn)), b_map),
+                *packed_specs,
                 *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
                             (m, bn), j_map),
             ],
@@ -459,18 +569,20 @@ def _build_ws(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
                 [pltpu.VMEM((m, bn), _acc_dtype(a.dtype))] if use_acc
                 else []),
             interpret=interpret,
-        )(a, b, *epi_args)
+        )(a, b, *packed, *epi_args)
 
     # streamed outputs: single-dispatch revisited accumulation
     return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=True,
-                      epi=epi, epi_args=epi_args)
+                      epi=epi, epi_args=epi_args, pk=pk)
 
 
 # ---------------------------------------------------------------------------
 # IS-anchored kernels.
 # ---------------------------------------------------------------------------
 def _is_stripe_kernel(a_ref, b_ref, *refs, b_whole: bool, bk: int, bn: int,
-                      gk: int, epi: Optional[Epilogue], use_acc: bool):
+                      gk: int, epi: Optional[Epilogue], use_acc: bool,
+                      wb: Optional[int] = None, has_comp: bool = False):
+    bhi_ref, comp_ref, refs = _pop_packed(refs, wb, has_comp)
     if use_acc:   # exact accumulation in a scratch of the acc dtype
         o_ref, acc_ref = refs[-2], refs[-1]
         epi_refs = refs[:-2]
@@ -479,9 +591,9 @@ def _is_stripe_kernel(a_ref, b_ref, *refs, b_whole: bool, bk: int, bn: int,
         epi_refs = refs[:-1]
     buf = acc_ref if use_acc else o_ref
     k, j = pl.program_id(1), pl.program_id(2)
-    b = b_ref[...]
-    if b_whole:
-        b = b_ref[pl.dslice(k * bk, bk), pl.dslice(j * bn, bn)]
+    b = _load_b(b_ref, bhi_ref, wb,
+                Residency.WHOLE if b_whole else Residency.STREAMED,
+                k, bk, j, bn)
     part = jnp.dot(a_ref[...], b, preferred_element_type=buf.dtype)
     sl = pl.dslice(j * bn, bn)
 
@@ -496,14 +608,17 @@ def _is_stripe_kernel(a_ref, b_ref, *refs, b_whole: bool, bk: int, bn: int,
     if epi is not None:
         @pl.when(k == gk - 1)
         def _epilogue():
+            acc = buf[:, sl]
+            if comp_ref is not None:   # outlier rows land at the flush
+                acc = acc + comp_ref[...]
             scale, bias, residual = _read_epi(epi, epi_refs, res_cols=sl)
             o_ref[:, sl] = _apply_epilogue(
-                epi, buf[:, sl], scale, bias, residual, o_ref.dtype
+                epi, acc, scale, bias, residual, o_ref.dtype
             )
 
 
 def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
-              epi, epi_args):
+              epi, epi_args, pk: Optional[_Packed] = None):
     (m, kdim), (_, n) = a.shape, b.shape
     bm, bk, bn = spec.block
     gm, gk, gn = m // bm, kdim // bk, n // bn
@@ -517,16 +632,21 @@ def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
         kernel = functools.partial(
             _is_stripe_kernel, b_whole=b_whole, bk=bk, bn=bn, gk=gk, epi=epi,
             use_acc=use_acc,
+            wb=None if pk is None else pk.bits,
+            has_comp=pk is not None and pk.comp is not None,
         )
         j_map = lambda i, k, j: (0, j)
         i_map = lambda i, k, j: (i, 0)
+        packed, packed_specs = _packed_operands(
+            pk, b_block, b_map, bm, bn, lambda i, k, j: (i, j))
         scale = epi_args[0] if (epi is not None and epi.scale) else None
         return pl.pallas_call(
             kernel,
             grid=(gm, gk, gn),
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda i, k, j: (i, k)),
-                pl.BlockSpec(b_block, b_map),
+                pl.BlockSpec(_codes_block(pk, b_block), b_map),
+                *packed_specs,
                 *_epi_specs(epi, scale, bm, bn, i_map, j_map, j_map,
                             (bm, n), i_map),
             ],
@@ -536,11 +656,11 @@ def _build_is(a, b, out_dtype, spec: DataflowSpec, interpret: bool,
                 [pltpu.VMEM((bm, n), _acc_dtype(a.dtype))] if use_acc
                 else []),
             interpret=interpret,
-        )(a, b, *epi_args)
+        )(a, b, *packed, *epi_args)
 
     # streamed outputs: single-dispatch revisited accumulation
     return _build_rmw(a, b, out_dtype, spec, interpret, m_minor=False,
-                      epi=epi, epi_args=epi_args)
+                      epi=epi, epi_args=epi_args, pk=pk)
 
 
 # ---------------------------------------------------------------------------
@@ -556,6 +676,9 @@ def matmul_df(
     scale: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    weight_bits: Optional[int] = None,
+    b_hi: Optional[jax.Array] = None,
+    comp: Optional[jax.Array] = None,
 ) -> jax.Array:
     """(M, K) @ (K, N) under the given dataflow. Shapes must tile evenly
     by ``spec.block`` (use ``ops.matmul`` / ``ops.matmul_fused`` for
@@ -566,9 +689,34 @@ def matmul_df(
     (per-tensor), (1, N) (per-column) or (M, 1) (per-row — e.g. int8
     per-activation-row dequant) float32, ``bias`` is (1, N) float32,
     ``residual`` is (M, N).
+
+    With ``weight_bits`` set (4 or 5), ``b`` is the packed sub-byte
+    nibble plane (K/8, N) int32 from ``kernels/pack.py`` (``b_hi`` the
+    (K/32, N) bit plane at 5 bits); each anchor decompresses the active
+    block to int8 lanes in VMEM at the load.  ``comp`` is the optional
+    (M, N) int32 outlier compensation term (``A[:, idx] @ delta``) added
+    to the accumulator at the epilogue flush — it requires a fused
+    epilogue so the corrected accumulator never round-trips HBM raw.
     """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
-        raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
+    if weight_bits is None:
+        if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+            raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
+    else:
+        if weight_bits not in (4, 5):
+            raise ValueError(f"weight_bits must be 4 or 5, got {weight_bits}")
+        if not jnp.issubdtype(a.dtype, jnp.integer):
+            raise ValueError(
+                f"packed weights need integer activations, got {a.dtype}")
+        if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0] * 8:
+            raise ValueError(
+                f"bad packed shapes: a {a.shape} vs nibble plane {b.shape}")
+        if weight_bits == 5:
+            if b_hi is None:
+                raise ValueError("weight_bits=5 needs the b_hi bit plane")
+            if b_hi.shape != (a.shape[1] // 32, b.shape[1]):
+                raise ValueError(
+                    f"bit plane shape {b_hi.shape} != "
+                    f"({a.shape[1] // 32}, {b.shape[1]})")
     m, kdim = a.shape
     n = b.shape[1]
     bm, bk, bn = spec.block
@@ -576,7 +724,19 @@ def matmul_df(
         raise ValueError(
             f"shapes ({m},{kdim},{n}) must tile by block {spec.block}"
         )
+    if weight_bits is not None and bk % (32 if weight_bits == 5 else 8):
+        raise ValueError(
+            f"packed weight_bits={weight_bits} needs bk divisible by "
+            f"{32 if weight_bits == 5 else 8}, got {bk}")
+    if comp is not None:
+        if weight_bits is None:
+            raise ValueError("comp is only meaningful with packed weights")
+        if comp.shape != (m, n):
+            raise ValueError(f"comp shape {comp.shape} != ({m}, {n})")
     epi = epilogue if (epilogue is not None and not epilogue.is_noop) else None
+    if comp is not None and epi is None:
+        raise ValueError(
+            "outlier compensation requires a fused epilogue flush")
     if epi is not None:
         if epi.scale:
             if scale is None:
@@ -600,5 +760,6 @@ def matmul_df(
     if out_dtype is None:
         out_dtype = jnp.float32 if epi is not None else _acc_dtype(a.dtype)
     epi_args = _epi_operands(epi, scale, bias, residual)
+    pk = None if weight_bits is None else _Packed(weight_bits, b_hi, comp)
     build = {OS: _build_os, WS: _build_ws, IS: _build_is}[spec.anchor]
-    return build(a, b, out_dtype, spec, interpret, epi, epi_args)
+    return build(a, b, out_dtype, spec, interpret, epi, epi_args, pk=pk)

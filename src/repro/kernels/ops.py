@@ -36,7 +36,9 @@ from repro.core.dataflow import (
     DataflowSpec, Epilogue, GemmProblem, Residency, SpecOverride,
     IS, OS, WS,
 )
-from repro.kernels import attention_df, binary_mm, conv2d_df, matmul_df, ref
+from repro.kernels import (
+    attention_df, binary_mm, conv2d_df, matmul_df, pack, ref,
+)
 
 
 def _on_tpu() -> bool:
@@ -84,7 +86,8 @@ def _resolve_spec(spec, problem, backend: str) -> DataflowSpec:
     return spec
 
 
-def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype) -> GemmProblem:
+def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype,
+                  weight_bits: Optional[int] = None) -> GemmProblem:
     integer = jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer)
     if out_dtype is None:
         out = "int32" if integer else "float32"
@@ -93,11 +96,13 @@ def _gemm_problem(m: int, k: int, n: int, in_dtype, out_dtype) -> GemmProblem:
     return GemmProblem(
         m=m, k=k, n=n, in_dtype=str(jnp.dtype(in_dtype)), out_dtype=out,
         acc_dtype="int32" if integer else "float32",
+        weight_bits=weight_bits,
     )
 
 
 def _conv_problem(n: int, ih: int, iw: int, fh: int, fw: int, stride: int,
-                  cin: int, cout: int, in_dtype, out_dtype) -> ConvProblem:
+                  cin: int, cout: int, in_dtype, out_dtype,
+                  weight_bits: Optional[int] = None) -> ConvProblem:
     integer = jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer)
     if out_dtype is None:
         out = "int32" if integer else "float32"
@@ -106,6 +111,7 @@ def _conv_problem(n: int, ih: int, iw: int, fh: int, fw: int, stride: int,
     return ConvProblem(
         ih=ih, iw=iw, fh=fh, fw=fw, s=stride, cin=cin, cout=cout, n=n,
         in_dtype=str(jnp.dtype(in_dtype)), out_dtype=out,
+        weight_bits=weight_bits,
     )
 
 
@@ -445,8 +451,18 @@ def attention(
     group = group or hq // hkv
     backend = backend or ("pallas" if _on_tpu() else "xla")
     quant = k.dtype == jnp.int8
-    if quant and (k_scale is None or v_scale is None):
-        raise ValueError("int8 K/V need per-position k_scale/v_scale")
+    if quant:
+        if k_scale is None or v_scale is None:
+            raise ValueError("int8 K/V need per-position k_scale/v_scale")
+        # catch wrong scale layouts (e.g. a squeezed (B, H, S) vector or a
+        # per-tensor scalar) before they broadcast silently in the kernel
+        want_k, want_v = k.shape[:-1] + (1,), v.shape[:-1] + (1,)
+        if k_scale.shape != want_k or v_scale.shape != want_v:
+            raise ValueError(
+                f"int8 K/V scales must be per-position with a trailing "
+                f"singleton lane: expected k_scale {want_k} and v_scale "
+                f"{want_v}, got {k_scale.shape} and {v_scale.shape}"
+            )
     win_eff = window if window is not None else window_dyn
     if backend == "xla":
         return _poison(
@@ -867,3 +883,254 @@ def int8_matmul_fused(
         residual=residual,
         activation=activation, spec=spec, backend=backend,
     )
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packed-weight GEMM / conv (kernels/pack.py).
+#
+# The weight never exists densely in HBM: the kernel streams the packed
+# nibble/bit planes and decompresses each (bk, bn) slab to int8 lanes in
+# VMEM at the stripe load.  Outlier rows (MSR sidecar) are compensated by
+# a precomputed ``A[:, idx] @ delta`` term added to the accumulator at the
+# epilogue flush, so the corrected int32 accumulator never round-trips
+# HBM raw.  Both ops are *bit-exact* against the dequantize-then-matmul
+# oracles (``ref.matmul_packed_ref`` / ``ref.conv2d_packed_ref``) when the
+# epilogue is scale-only.
+# ---------------------------------------------------------------------------
+
+
+def _packed_gran(bits: int) -> int:
+    return 32 if bits == 5 else 8
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "spec", "backend"))
+def matmul_packed_fused(
+    aq: jax.Array,                    # (M, K) int8 activations
+    pw: pack.PackedWeights,
+    a_scale: Optional[jax.Array] = None,    # per-tensor activation scale
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    spec: Optional[DataflowSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Packed-weight GEMM with in-register decompress and fused epilogue:
+    ``act((a_scale * w_scale) * (aq @ W) + bias) + residual`` -> f32,
+    where ``W`` is the exact int8 image of the packed weight.
+
+    The spec resolves through the autotune cache keyed on the
+    ``weight_bits``-tagged :class:`GemmProblem`, so packed and plain
+    layouts rank (and cache) independently.
+    """
+    fault = _inject("kernel.matmul")
+    m, k = aq.shape
+    if k != pw.k:
+        raise ValueError(f"activation K={k} != packed weight k={pw.k}")
+    n = pw.n
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if a_scale is not None:
+        a_scale = jnp.asarray(a_scale, jnp.float32)
+        if a_scale.size != 1:
+            raise ValueError(
+                f"a_scale must be per-tensor (scalar), got {a_scale.shape}")
+        a_scale = a_scale.reshape(1, 1)
+    if backend == "xla":
+        return _poison(ref.matmul_packed_ref(
+            aq, pw, a_scale=a_scale, bias=bias, residual=residual,
+            activation=activation,
+        ), fault)
+    scale = pw.scale if a_scale is None else a_scale * pw.scale  # (1, N)
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, n)
+    epi = Epilogue(
+        scale=True, bias=bias is not None, activation=activation,
+        residual=residual is not None,
+    )
+    spec = _resolve_spec(
+        spec,
+        _gemm_problem(m, k, n, aq.dtype, jnp.float32, weight_bits=pw.bits),
+        backend)
+    bm, bk, bn = spec.block
+    gran = _packed_gran(pw.bits)
+    if bk % gran:  # packed slabs decode in whole int32 words
+        bk = max(gran, bk - bk % gran)
+    # activations pad to the pack-time K (mult of 32), then to the block;
+    # packed planes zero-pad along K/N — pad rows decode against zero
+    # activation columns, pad columns are sliced off the output
+    ap = _pad_to(jnp.pad(aq, ((0, 0), (0, pw.k_pad - k))), (bm, bk))
+    codes = _pad_to(pw.codes, (bk // 8, bn))
+    hi = (_pad_to(pw.highbits, (bk // 32, bn))
+          if pw.highbits is not None else None)
+    mp, kp, np_ = ap.shape[0], ap.shape[1], codes.shape[1]
+    scale_p = _pad_to(scale, (1, bn))
+    if bias is not None:
+        bias = _pad_to(bias, (1, bn))
+    if residual is not None:
+        residual = _pad_to(residual, (bm, bn))
+    comp = None
+    if pw.outlier_idx.shape[0]:
+        gathered = jnp.take(ap, pw.outlier_idx, axis=1, mode="fill",
+                            fill_value=0).astype(jnp.int32)
+        comp = _pad_to(
+            jnp.dot(gathered, pw.outlier_delta,
+                    preferred_element_type=jnp.int32),
+            (bm, bn))
+    spec = spec.with_block((min(bm, mp), min(bk, kp), min(bn, np_)))
+    out = matmul_df.matmul_df(
+        ap, codes, spec, out_dtype=jnp.float32,
+        interpret=backend == "interpret",
+        epilogue=epi, scale=scale_p, bias=bias, residual=residual,
+        weight_bits=pw.bits, b_hi=hi, comp=comp,
+    )
+    return _poison(out[:m, :n], fault)
+
+
+def matmul_packed(
+    aq: jax.Array,
+    pw: pack.PackedWeights,
+    a_scale: Optional[jax.Array] = None,
+    spec: Optional[DataflowSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Packed-weight GEMM, dequant-only epilogue:
+    ``(a_scale * w_scale) * (aq @ W)`` -> f32 (bit-exact vs the oracle)."""
+    return matmul_packed_fused(aq, pw, a_scale=a_scale, spec=spec,
+                               backend=backend)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "activation", "spec", "b_oh", "bc", "bk",
+                     "backend"),
+)
+def conv2d_packed_fused(
+    xq: jax.Array,                    # (N, H, W, Cin) int8
+    pcw: pack.PackedConvWeights,
+    stride: int = 1,
+    x_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    spec: Optional[DataflowSpec] = None,
+    b_oh: int = 8,
+    bc: int = 128,
+    bk: int = 128,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Packed-weight conv with in-register decompress and fused epilogue.
+
+    Outlier compensation is materialized op-side: each sidecar slot is a
+    (tap, channel) row whose activation window patch is sliced out of the
+    padded image and rank-1-multiplied with the delta row; the summed
+    (N, oh, ow, K) int32 term joins the accumulator at the kernel flush.
+    """
+    fault = _inject("kernel.conv2d")
+    n, ih, iw, cin = xq.shape
+    if cin != pcw.cin:
+        raise ValueError(f"input channels {cin} != packed cin {pcw.cin}")
+    fh, fw, kout, cp = pcw.fh, pcw.fw, pcw.kout, pcw.cin_pad
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    backend = backend or ("pallas" if _on_tpu() else "xla")
+    if x_scale is not None:
+        x_scale = jnp.asarray(x_scale, jnp.float32)
+        if x_scale.size != 1:
+            raise ValueError(
+                f"x_scale must be per-tensor (scalar), got {x_scale.shape}")
+        x_scale = x_scale.reshape(1, 1)
+    if backend == "xla":
+        return _poison(ref.conv2d_packed_ref(
+            xq, pcw, stride, x_scale=x_scale, bias=bias, residual=residual,
+            activation=activation,
+        ), fault)
+    scale = pcw.scale if x_scale is None else x_scale * pcw.scale  # (1, K)
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, kout)
+    epi = Epilogue(
+        scale=True, bias=bias is not None, activation=activation,
+        residual=residual is not None,
+    )
+    override = spec if isinstance(spec, SpecOverride) else None
+    if spec is None or override is not None:
+        try:
+            spec = autotune.best_spec(
+                _conv_problem(n, ih, iw, fh, fw, stride, cin, kout,
+                              xq.dtype, jnp.float32, weight_bits=pcw.bits),
+                backend=backend,
+            )
+            b_oh, bc, bk = spec.block
+        except ValueError:
+            spec = DataflowSpec.optimized()  # see conv2d's fallback note
+        if override is not None:
+            spec = override.merge(spec.with_block((b_oh, bc, bk)))
+            b_oh, bc, bk = spec.block
+    gran = _packed_gran(pcw.bits)
+    bc_ = min(bc, -(-cp // 128) * 128)
+    if bc_ % gran:
+        raise ValueError(
+            f"packed conv needs a channel block divisible by {gran}, "
+            f"got bc={bc_}")
+    bk_ = min(bk, -(-kout // 128) * 128)
+    b_oh_ = min(b_oh, oh)
+    oh_pad = -(-oh // b_oh_) * b_oh_
+    ih_need = (oh_pad - 1) * stride + fh + (stride - 1)
+    iw_need = (ow - 1) * stride + fw + (stride - 1)
+    # channels pad to the pack-time cin_pad (per-tap mult of 32) first so
+    # the image and the planes agree on the lane layout, then to bc_
+    xp = _pad_to(jnp.pad(xq, ((0, 0), (0, 0), (0, 0), (0, cp - cin))),
+                 (1, 1, 1, bc_))
+    xp = jnp.pad(
+        xp,
+        ((0, 0), (0, max(0, ih_need - ih)), (0, max(0, iw_need - iw)),
+         (0, 0)),
+    )
+    codes = _pad_to(pcw.codes, (1, 1, bc_ // 8, bk_))
+    hi = (_pad_to(pcw.highbits, (1, 1, bc_ // 32, bk_))
+          if pcw.highbits is not None else None)
+    kpad = codes.shape[3]
+    scale_p = _pad_to(scale, (1, bk_))
+    if bias is not None:
+        bias = _pad_to(bias, (1, bk_))
+    if residual is not None:
+        residual = jnp.pad(
+            residual,
+            ((0, 0), (0, oh_pad - oh), (0, 0), (0, kpad - kout)),
+        )
+    comp = None
+    cap = pcw.outlier_idx.shape[0]
+    if cap:
+        hslice = (oh_pad - 1) * stride + 1
+        wslice = (ow - 1) * stride + 1
+        delta_p = _pad_to(pcw.outlier_delta, (1, bk_))
+        comp = jnp.zeros((n, oh_pad, ow, kpad), jnp.int32)
+        for r in range(cap):
+            f = pcw.outlier_idx[r]          # flat (ky*fw + kx)*cp + c
+            ky = f // (fw * cp)
+            kx = (f // cp) % fw
+            c = f % cp
+            # dynamic_slice clamps the sentinel row (ky == fh) in bounds;
+            # its zero delta nullifies the garbage patch
+            patch = jax.lax.dynamic_slice(
+                xp, (0, ky, kx, c), (n, hslice, wslice, 1))
+            patch = patch[:, ::stride, ::stride, 0].astype(jnp.int32)
+            comp = comp + patch[..., None] * delta_p[r][None, None, None, :]
+    out = conv2d_df.conv2d_df(
+        xp, codes, stride, spec, oh=oh_pad, ow=ow, b_oh=b_oh_, bc=bc_,
+        bk=bk_, out_dtype=jnp.float32, interpret=backend == "interpret",
+        epilogue=epi, scale=scale_p, bias=bias, residual=residual,
+        weight_bits=pcw.bits, w_hi=hi, comp=comp,
+    )
+    return _poison(out[:, :oh, :, :kout], fault)
+
+
+def conv2d_packed(
+    xq: jax.Array,
+    pcw: pack.PackedConvWeights,
+    stride: int = 1,
+    x_scale: Optional[jax.Array] = None,
+    spec: Optional[DataflowSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Packed-weight conv, dequant-only epilogue (bit-exact vs oracle)."""
+    return conv2d_packed_fused(xq, pcw, stride=stride, x_scale=x_scale,
+                               spec=spec, backend=backend)

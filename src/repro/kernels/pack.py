@@ -1,0 +1,308 @@
+"""Sub-byte (MSR-coded) weight packing with a sparse outlier sidecar.
+
+The third quantization tier, between int8 and binary: trained int8
+weights overwhelmingly carry a run of identical most-significant bits
+(the MSR analysis of the Low-Cost-AI-Accelerator line of work — >=99%
+of rows fit 4-5 bits), so the int8 weight matrix is stored as dense
+sub-byte *codes* plus a tiny exact-correction sidecar:
+
+  * per-column(-group) symmetric int8 pre-quantization
+    (``core.quant.symmetric_int8``) -> ``q`` (K, N) int8, ``scale``
+    (1, N) float32;
+  * offset-binary codes ``u = clip(q, lo, hi) + 2**(bits-1)`` with
+    ``[lo, hi] = [-2**(bits-1), 2**(bits-1)-1]``, bits in {4, 5};
+  * **nibble plane** ``codes``: (K/8, N) int32 — the low 4 code bits of
+    8 consecutive K rows per 32-bit word (row ``r*8 + t`` lives in bits
+    ``[4t, 4t+4)``);
+  * **bit plane** ``highbits`` (bits == 5 only): (K/32, N) int32 — code
+    bit 4 of 32 consecutive K rows per word;
+  * **outlier sidecar**: K rows where ``q`` falls outside ``[lo, hi]``
+    (no MSR run) are stored exactly as ``delta = q_row - clip(q_row)``
+    under ``(outlier_idx (R,) int32, outlier_delta (R, N) int32)``.
+    Unused capacity slots carry ``idx == k_pad`` and zero deltas, so
+    fixed-capacity packing is traceable under jit/vmap (stacked
+    per-layer params).
+
+K is padded to a multiple of 32 at pack time; the pad rows encode the
+value 0 exactly, so any block-padded GEMM over the planes is exact.
+
+The planes are what the Pallas kernels stream: ``matmul_df`` /
+``conv2d_df`` load packed int32 words per block and decompress to int8
+lanes in VMEM via :func:`unpack_block` (shift/mask/reshape — no HBM
+round trip of the decompressed matrix), then run the usual exact
+int8 x int8 -> int32 dot.  The outlier correction is the rank-R term
+``A[:, idx] @ delta``; ``ops.matmul_packed`` feeds it to the kernel as
+a precomputed compensation operand added to the accumulator at the
+epilogue-side flush.
+
+Byte accounting for the explorer lives in
+``core.cost_model.packed_weight_bytes`` (charged when a problem's
+``weight_bits`` is set).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import symmetric_int8
+
+WORD_NIBBLES = 8       # 4-bit codes per int32 word (nibble plane)
+WORD_BITS = 32         # bit-plane entries per int32 word
+PACK_BITS = (4, 5)     # supported code widths
+
+
+def outlier_capacity(k: int) -> int:
+    """Worst-case MSR outlier rows for a K-deep weight: <=3 per 256."""
+    return max(1, -(-(3 * k) // 256))
+
+
+def _code_range(bits: int) -> Tuple[int, int]:
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def _bitcast_i32(words: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(words.astype(jnp.uint32), jnp.int32)
+
+
+def _pack_nibbles(u: jax.Array) -> jax.Array:
+    """(K, N) codes in [0, 16) -> (K/8, N) int32 words (K % 8 == 0)."""
+    kp, n = u.shape
+    w = u.astype(jnp.uint32).reshape(kp // WORD_NIBBLES, WORD_NIBBLES, n)
+    shifts = (jnp.arange(WORD_NIBBLES, dtype=jnp.uint32) * 4)[None, :, None]
+    return _bitcast_i32(jnp.sum(w << shifts, axis=1, dtype=jnp.uint32))
+
+
+def _pack_bits(b: jax.Array) -> jax.Array:
+    """(K, N) bits in {0, 1} -> (K/32, N) int32 words (K % 32 == 0)."""
+    kp, n = b.shape
+    w = b.astype(jnp.uint32).reshape(kp // WORD_BITS, WORD_BITS, n)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    return _bitcast_i32(jnp.sum(w << shifts, axis=1, dtype=jnp.uint32))
+
+
+def unpack_block(words: jax.Array, hi_words: Optional[jax.Array],
+                 bits: int, rows: int) -> jax.Array:
+    """Decode packed int32 words to int8 lanes — the in-register decompress.
+
+    ``words`` is a (rows/8, cols) nibble-plane block, ``hi_words`` the
+    matching (rows/32, cols) bit-plane block when ``bits == 5``.  Pure
+    shift/mask/reshape on values already in VMEM, so it lowers inside a
+    Pallas kernel body at block-load time.  (The arithmetic right shift
+    on int32 drags sign bits through the top nibble; the ``& 0xF`` mask
+    discards them.)
+    """
+    cols = words.shape[-1]
+    shifts = (jnp.arange(WORD_NIBBLES, dtype=jnp.int32) * 4)[None, :, None]
+    u = (words[:, None, :] >> shifts) & 0xF
+    u = u.reshape(rows, cols)
+    if bits == 5:
+        hs = jnp.arange(WORD_BITS, dtype=jnp.int32)[None, :, None]
+        hb = (hi_words[:, None, :] >> hs) & 0x1
+        u = u + (hb.reshape(rows, cols) << 4)
+    return (u - (1 << (bits - 1))).astype(jnp.int8)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedWeights:
+    """Packed sub-byte weight planes + per-group scales + outlier sidecar.
+
+    A pytree (planes/scale/sidecar are leaves; ``bits``/``k``/``n`` are
+    static aux data), so stacked per-layer packed params vmap/scan like
+    any other parameter subtree.
+    """
+
+    codes: jax.Array                 # (k_pad/8, n) int32 nibble plane
+    highbits: Optional[jax.Array]    # (k_pad/32, n) int32, bits == 5 only
+    scale: jax.Array                 # (1, n) float32 per-column(-group)
+    outlier_idx: jax.Array           # (r,) int32; k_pad marks empty slots
+    outlier_delta: jax.Array         # (r, n) int32 exact row corrections
+    bits: int                        # 4 or 5
+    k: int                           # true reduction length
+    n: int
+
+    @property
+    def k_pad(self) -> int:
+        return self.codes.shape[-2] * WORD_NIBBLES
+
+    def tree_flatten(self):
+        leaves = (self.codes, self.highbits, self.scale,
+                  self.outlier_idx, self.outlier_delta)
+        return leaves, (self.bits, self.k, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+def _pack_core(qp: jax.Array, bits: int, max_outliers: Optional[int]):
+    """Shared plane/sidecar construction for a row-padded (Kp, N) int32
+    matrix (Kp % 32 == 0) -> (codes, highbits, idx, delta)."""
+    kp = qp.shape[0]
+    lo, hi = _code_range(bits)
+    trunc = jnp.clip(qp, lo, hi)
+    u = trunc + (1 << (bits - 1))              # offset-binary, >= 0
+    codes = _pack_nibbles(u & 0xF)
+    highbits = _pack_bits((u >> 4) & 0x1) if bits == 5 else None
+
+    is_out = jnp.any(qp != trunc, axis=1)      # (kp,) rows with no MSR run
+    if max_outliers is None:
+        mask = np.asarray(jax.device_get(is_out))
+        idx = jnp.asarray(np.nonzero(mask)[0], jnp.int32)
+    else:
+        cap = int(max_outliers)
+        if not isinstance(is_out, jax.core.Tracer):
+            r_true = int(jnp.sum(is_out))
+            if r_true > cap:
+                raise ValueError(
+                    f"{r_true} outlier rows exceed max_outliers={cap}")
+        idx = jnp.nonzero(is_out, size=cap, fill_value=kp)[0].astype(jnp.int32)
+    delta = (jnp.take(qp, idx, axis=0, mode="fill", fill_value=0)
+             - jnp.take(trunc, idx, axis=0, mode="fill", fill_value=0))
+    return codes, highbits, idx, delta.astype(jnp.int32)
+
+
+def pack_int8(q: jax.Array, scale: jax.Array, bits: int = 4,
+              max_outliers: Optional[int] = None) -> PackedWeights:
+    """Pack an int8 weight matrix (K, N) into sub-byte planes + sidecar.
+
+    ``max_outliers=None`` (concrete arrays only) sizes the sidecar to the
+    actual outlier count; an int gives a fixed capacity so packing is
+    traceable under jit/vmap — the caller guarantees the data fits (a
+    concrete overflow raises, a traced one cannot be checked).
+    """
+    if bits not in PACK_BITS:
+        raise ValueError(f"weight_bits must be one of {PACK_BITS}, got {bits}")
+    if q.ndim != 2:
+        raise ValueError(f"expected a (K, N) weight matrix, got {q.shape}")
+    k, n = q.shape
+    qp = jnp.asarray(q, jnp.int32)
+    pad = (-k) % WORD_BITS
+    if pad:
+        qp = jnp.pad(qp, ((0, pad), (0, 0)))   # value 0 encodes exactly
+    codes, highbits, idx, delta = _pack_core(qp, bits, max_outliers)
+    scale = jnp.broadcast_to(
+        jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
+    return PackedWeights(codes, highbits, scale, idx, delta, bits, k, n)
+
+
+def pack_weights(w: jax.Array, bits: int = 4, group_size: int = 1,
+                 max_outliers: Optional[int] = None) -> PackedWeights:
+    """Quantize a float weight matrix (K, N) to int8 and pack it.
+
+    The symmetric int8 scale is shared per group of ``group_size``
+    adjacent output columns (group 1 = per-column).  Groups run along N,
+    not K: the kernel decompresses to exact int8 *codes* at the block
+    load and applies the scale once at the epilogue flush, which demands
+    a scale constant along the reduction.
+    """
+    k, n = w.shape
+    if group_size <= 0 or n % group_size:
+        raise ValueError(f"group_size {group_size} must divide n={n}")
+    wg = w.reshape(k, n // group_size, group_size)
+    qg, sg = symmetric_int8(wg, axis=(0, 2))          # (1, G, 1) scales
+    scale = jnp.broadcast_to(sg, (1, n // group_size, group_size))
+    return pack_int8(qg.reshape(k, n), scale.reshape(1, n), bits=bits,
+                     max_outliers=max_outliers)
+
+
+def unpack_codes(pw: PackedWeights) -> jax.Array:
+    """Dense int8 matrix (k, n) from the planes alone (outliers still
+    truncated — this is exactly what the kernel's in-register decompress
+    reconstructs before compensation)."""
+    q = unpack_block(pw.codes, pw.highbits, pw.bits, pw.k_pad)
+    return q[: pw.k]
+
+
+def unpack_weights(pw: PackedWeights) -> Tuple[jax.Array, jax.Array]:
+    """Exact int8 reconstruction -> (q (k, n) int8, scale (1, n) f32).
+
+    Scatters the outlier deltas back over the truncated codes; empty
+    sidecar slots (idx == k_pad) drop out of bounds.
+    """
+    qp = jnp.pad(unpack_codes(pw).astype(jnp.int32),
+                 ((0, pw.k_pad - pw.k), (0, 0)))
+    qp = qp.at[pw.outlier_idx].add(pw.outlier_delta, mode="drop")
+    return qp[: pw.k].astype(jnp.int8), pw.scale
+
+
+def dequantize(pw: PackedWeights, dtype=jnp.float32) -> jax.Array:
+    """Float reconstruction (k, n): exact int8 image times the scale."""
+    q, scale = unpack_weights(pw)
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv weights: the same planes, laid out per filter tap.
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedConvWeights:
+    """Packed (fh, fw, C, K) conv weights.
+
+    Channels are padded to a multiple of 32 *per tap* so the planes tile
+    along the input-channel axis exactly like the dense weight does in
+    ``conv2d_df`` (the kernel slices a (bc, bk) slab per reduction step
+    and decompresses it in-register).  Outlier rows live in the
+    flattened ``(ky * fw + kx) * cin_pad + c`` index space; empty slots
+    carry ``idx == fh * fw * cin_pad`` and zero deltas.
+    """
+
+    codes: jax.Array                 # (fh, fw, cin_pad/8, kout) int32
+    highbits: Optional[jax.Array]    # (fh, fw, cin_pad/32, kout) int32
+    scale: jax.Array                 # (1, kout) float32 per output channel
+    outlier_idx: jax.Array           # (r,) int32 flat tap-channel rows
+    outlier_delta: jax.Array         # (r, kout) int32
+    bits: int
+    fh: int
+    fw: int
+    cin: int                         # true input channels
+    cin_pad: int                     # per-tap padded channels (mult of 32)
+    kout: int
+
+    def tree_flatten(self):
+        leaves = (self.codes, self.highbits, self.scale,
+                  self.outlier_idx, self.outlier_delta)
+        aux = (self.bits, self.fh, self.fw, self.cin, self.cin_pad,
+               self.kout)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+def pack_conv_weights(w: jax.Array, bits: int = 4,
+                      max_outliers: Optional[int] = None
+                      ) -> PackedConvWeights:
+    """Quantize (fh, fw, C, K) conv weights per output channel and pack."""
+    if bits not in PACK_BITS:
+        raise ValueError(f"weight_bits must be one of {PACK_BITS}, got {bits}")
+    fh, fw, c, kout = w.shape
+    q, scale = symmetric_int8(w, axis=(0, 1, 2))      # scale (1, 1, 1, K)
+    cp = c + ((-c) % WORD_BITS)
+    qp = jnp.pad(q.astype(jnp.int32), ((0, 0), (0, 0), (0, cp - c), (0, 0)))
+    codes, highbits, idx, delta = _pack_core(
+        qp.reshape(fh * fw * cp, kout), bits, max_outliers)
+    codes = codes.reshape(fh, fw, cp // WORD_NIBBLES, kout)
+    if highbits is not None:
+        highbits = highbits.reshape(fh, fw, cp // WORD_BITS, kout)
+    return PackedConvWeights(codes, highbits, scale.reshape(1, kout),
+                             idx, delta, bits, fh, fw, c, cp, kout)
+
+
+def unpack_conv_weights(pcw: PackedConvWeights
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Exact int8 reconstruction -> (q (fh, fw, cin, K) int8, scale)."""
+    flat_rows = pcw.fh * pcw.fw * pcw.cin_pad
+    codes = pcw.codes.reshape(flat_rows // WORD_NIBBLES, pcw.kout)
+    hi = (pcw.highbits.reshape(flat_rows // WORD_BITS, pcw.kout)
+          if pcw.highbits is not None else None)
+    q = unpack_block(codes, hi, pcw.bits, flat_rows).astype(jnp.int32)
+    q = q.at[pcw.outlier_idx].add(pcw.outlier_delta, mode="drop")
+    q = q.reshape(pcw.fh, pcw.fw, pcw.cin_pad, pcw.kout)[:, :, : pcw.cin]
+    return q.astype(jnp.int8), pcw.scale

@@ -10,6 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core.dataflow import EPILOGUE_ACTIVATIONS
 
 # the single name->fn table for epilogue activations; the in-kernel
@@ -399,10 +400,7 @@ def binary_conv2d_ref(
 
 def quantize_int8(x: jax.Array, axis: int = -1):
     """Symmetric per-axis int8 quantization -> (q, scale)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
-    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.symmetric_int8(x, axis=axis)
 
 
 def int8_matmul_ref(aq, bq, a_scale, b_scale) -> jax.Array:
@@ -436,3 +434,73 @@ def matmul_fused_ref(
     if residual is not None:
         x = x + residual.astype(jnp.float32)
     return x.astype(out_dtype or jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packed-weight oracles (kernels/pack.py).  The kernel contract is
+# *bit-exactness* against dequantize-then-matmul: int8 x int8 -> int32
+# accumulation is exact regardless of blocking, the outlier compensation
+# restores the exact unclipped codes, and the scale epilogue is one f32
+# multiply — so these oracles pin the packed kernels bitwise, not allclose.
+# ---------------------------------------------------------------------------
+
+
+def pack_roundtrip(w: jax.Array, bits: int = 4, group_size: int = 1,
+                   max_outliers: Optional[int] = None) -> jax.Array:
+    """Pack ``w`` then dequantize back -> float32 reconstruction.
+
+    The pack -> unpack leg is lossless on the int8 codes (outlier rows
+    included); the only error left is the int8 quantization itself, so
+    ``|w - pack_roundtrip(w)| <= scale / 2`` elementwise.
+    """
+    from repro.kernels import pack
+
+    return pack.dequantize(
+        pack.pack_weights(w, bits=bits, group_size=group_size,
+                          max_outliers=max_outliers))
+
+
+def matmul_packed_ref(
+    aq: jax.Array,                    # (M, K) int8 activations
+    pw,                               # pack.PackedWeights
+    a_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Dequantize-then-matmul oracle for ``ops.matmul_packed``.
+
+    Unpacks the exact int8 codes (outlier deltas scattered back), runs
+    the int32 GEMM, and applies the same f32 epilogue as the fused
+    kernel: ``act((a_scale * w_scale) * acc + bias) + residual``.
+    """
+    from repro.kernels import pack
+
+    q, w_scale = pack.unpack_weights(pw)  # exact (k, n) int8
+    scale = w_scale if a_scale is None else (
+        jnp.asarray(a_scale, jnp.float32) * w_scale)
+    return matmul_fused_ref(
+        aq, q, bias=bias, scale=scale, residual=residual,
+        activation=activation, out_dtype=out_dtype)
+
+
+def conv2d_packed_ref(
+    xq: jax.Array,                    # (N, H, W, Cin) int8
+    pcw,                              # pack.PackedConvWeights
+    stride: int = 1,
+    x_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Dequantize-then-conv oracle for ``ops.conv2d_packed``."""
+    from repro.kernels import pack
+
+    q, w_scale = pack.unpack_conv_weights(pcw)  # exact (fh, fw, cin, K)
+    scale = w_scale if x_scale is None else (
+        jnp.asarray(x_scale, jnp.float32) * w_scale)
+    return conv2d_fused_ref(
+        xq, q, stride, bias=bias, scale=scale,
+        residual=residual, activation=activation, out_dtype=out_dtype)

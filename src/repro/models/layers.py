@@ -327,11 +327,9 @@ def _cache_update(buf, val, idx):
 
 def _quantize_kv(x):
     """Symmetric per-(batch, head, position) int8 quantization of K/V."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                 -127, 127).astype(jnp.int8)
-    return q, scale
+    from repro.core import quant
+
+    return quant.symmetric_int8(x, axis=-1)
 
 
 def attention_apply(
@@ -541,17 +539,84 @@ def init_binary_mlp(key, d_model: int, d_ff: int) -> Params:
     }
 
 
+# ---------------------------------------------------------------------------
+# Sub-byte packed-weight MLP (kernels/pack.py datapath).
+# ---------------------------------------------------------------------------
+def init_packed_mlp(key, d_model: int, d_ff: int, bits: int = 4) -> Params:
+    """SwiGLU MLP with sub-byte packed weights.
+
+    Weights are generated directly as MSR-structured int8 codes — almost
+    every reduction row fits the ``bits``-wide code range, plus a couple
+    of deliberate outlier rows per projection exercising the sidecar —
+    then packed at the fixed ``pack.outlier_capacity`` so the init is
+    traceable under the per-layer ``jax.vmap`` in ``lm.init_model``
+    (PackedWeights is a pytree; its leaves stack across layers).
+    """
+    from repro.kernels import pack
+
+    def one(k, d_in, d_out):
+        k1, k2, k3 = jax.random.split(k, 3)
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        q = jax.random.randint(k1, (d_in, d_out), lo, hi + 1, jnp.int32)
+        cap = pack.outlier_capacity(d_in)
+        n_out = min(2, cap)
+        rows = jax.random.choice(k2, d_in, (n_out,), replace=False)
+        spikes = jax.random.randint(k3, (n_out, d_out), -100, 101, jnp.int32)
+        q = q.at[rows].set(spikes)
+        scale = jnp.full((1, d_out), 1.0 / (127.0 * d_in ** 0.5), jnp.float32)
+        return pack.pack_int8(q.astype(jnp.int8), scale, bits=bits,
+                              max_outliers=cap)
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": one(k1, d_model, d_ff),   # gate
+        "w3": one(k2, d_model, d_ff),   # up
+        "w2": one(k3, d_ff, d_model),   # down
+    }
+
+
+def packed_mlp_apply(p: Params, x: jax.Array,
+                     backend: Optional[str] = None) -> jax.Array:
+    """SwiGLU through the packed-weight GEMMs.
+
+    Activations quantize per-tensor int8 at each projection boundary;
+    the packed kernel fuses the combined (activation x per-column
+    weight) dequant scale — and the gate's silu — into the accumulator
+    flush, so each projection stays one dispatch and the weight only
+    ever streams as packed planes.
+    """
+    from repro.core import quant
+    from repro.kernels import ops as kops
+
+    if backend is None:
+        backend = _BACKEND_OVERRIDE
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, xs = quant.symmetric_int8(x2)
+    gate = kops.matmul_packed_fused(xq, p["w1"], a_scale=xs,
+                                    activation="silu", backend=backend)
+    up = kops.matmul_packed(xq, p["w3"], a_scale=xs, backend=backend)
+    hq, hs = quant.symmetric_int8(gate * up)
+    out = kops.matmul_packed(hq, p["w2"], a_scale=hs, backend=backend)
+    return out.reshape(*lead, out.shape[-1])
+
+
 def mlp_apply(p: Params, x: jax.Array, cfg=None) -> jax.Array:
     """SwiGLU MLP.  With ``cfg.use_pallas_kernels`` on a TPU runtime the
     three projections run through the fused-epilogue kernel path (the
     gate's silu is fused into its GEMM's output write).  Binary-MLP
-    params (``cfg.binary_mlp`` -> ``init_binary_mlp``) are dispatched on
-    their keys to the xnor-popcount path."""
+    params (``cfg.binary_mlp`` -> ``init_binary_mlp``) and packed-weight
+    params (``cfg.packed_weights`` -> ``init_packed_mlp``) are
+    dispatched on their param types to the xnor-popcount / sub-byte
+    decompress paths."""
+    from repro.kernels import pack
     from repro.runtime import health
 
     fault = health.maybe_inject("layers.mlp")
     if "up" in p:   # binary MLP params (lm._init_layer under binary_mlp)
         out = binary_mlp_apply(p, x).astype(x.dtype)
+    elif isinstance(p.get("w1"), pack.PackedWeights):
+        out = packed_mlp_apply(p, x).astype(x.dtype)
     elif (cfg is not None and getattr(cfg, "use_pallas_kernels", False)
             and jax.default_backend() == "tpu"
             and _BACKEND_OVERRIDE is None):

@@ -58,6 +58,10 @@ def _init_layer(key, cfg) -> Params:
         p["ln2"] = layers.init_rmsnorm(cfg.d_model)["scale"]
         if getattr(cfg, "binary_mlp", False):
             p["mlp"] = layers.init_binary_mlp(ks[3], cfg.d_model, cfg.d_ff)
+        elif getattr(cfg, "packed_weights", False):
+            p["mlp"] = layers.init_packed_mlp(
+                ks[3], cfg.d_model, cfg.d_ff,
+                bits=getattr(cfg, "packed_weight_bits", 4))
         else:
             p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
                                        cfg.param_dtype)
@@ -109,6 +113,11 @@ def hot_gemm_problems(cfg, batch: int, seq: int):
     three projections (``layers.mlp_apply`` -> ``fused_dense``); extend
     this list as more matmuls (attention projections, LM head) are
     moved onto ``ops.matmul_fused``.
+
+    ``cfg.packed_weights`` configs route the MLP through
+    ``ops.matmul_packed`` instead, so their rows are the int8-activation
+    / ``weight_bits``-tagged problems the packed kernels key the
+    autotune cache on (``v6|gemm|...|wb4|...``).
     """
     from repro.core.dataflow import GemmProblem
 
@@ -118,6 +127,13 @@ def hot_gemm_problems(cfg, batch: int, seq: int):
     if cfg.d_ff and cfg.family != "ssm":
         shapes.add((t, cfg.d_model, cfg.d_ff))
         shapes.add((t, cfg.d_ff, cfg.d_model))
+    if getattr(cfg, "packed_weights", False):
+        wb = getattr(cfg, "packed_weight_bits", 4)
+        return [
+            GemmProblem(m, k, n, in_dtype="int8", out_dtype="float32",
+                        acc_dtype="int32", weight_bits=wb)
+            for m, k, n in sorted(shapes)
+        ]
     return [GemmProblem(m, k, n, in_dtype=dt) for m, k, n in sorted(shapes)]
 
 

@@ -16,14 +16,12 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 
 def quantize_grad(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor int8 quantization -> (q, scale)."""
-    g32 = g.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(g32))
-    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
-    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.symmetric_int8(g)
 
 
 def dequantize_grad(q: jax.Array, scale: jax.Array) -> jax.Array:

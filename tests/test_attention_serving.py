@@ -251,14 +251,16 @@ def test_window_sparsity_reaches_the_ranking():
     assert abs(r_full - r_win) > 0.1
 
 
-def test_window_aware_candidates_and_v5_keys():
+def test_window_aware_candidates_and_versioned_keys():
     win_prob = AttentionProblem(bh=8, sq=512, skv=512, d=D, window=48)
     opts = explorer._attn_kv_block_options(win_prob)
     assert 48 in opts                     # window-snapped block offered
     dec = AttentionProblem(bh=8, sq=1, skv=2048, d=D, kv_len=100)
     assert 104 in explorer._attn_kv_block_options(dec)  # 8-aligned kv_len
     key = autotune._key(win_prob, cost_model.V5E, "interpret")
-    assert key.startswith("v5|attn|8|512|512|64|1|c1|w48|float32|kl-|kd-|")
+    assert key.startswith(
+        f"v{autotune.CACHE_VERSION}|attn|"
+        "8|512|512|64|1|c1|w48|float32|kl-|kd-|")
     k2 = autotune._key(dataclasses.replace(win_prob, kv_len=256),
                        cost_model.V5E, "interpret")
     k3 = autotune._key(dataclasses.replace(win_prob, kv_dtype="int8"),

@@ -1,0 +1,399 @@
+"""Sub-byte packed weights (kernels/pack.py) and the shared quant util.
+
+Pins the PR-9 contracts:
+
+  * ``core.quant.symmetric_int8`` invariants (all-zero -> scale 1.0,
+    round-trip bound) and the three former private copies delegating;
+  * pack -> unpack losslessness on the int8 codes, outlier rows
+    reconstructing exactly, traced fixed-capacity packing matching the
+    concrete path;
+  * ``ops.matmul_packed`` / ``ops.conv2d_packed`` BIT-exact against the
+    dequantize-then-matmul oracles on every anchor, outliers exercised,
+    one pallas_call per dispatch;
+  * packed-byte cost accounting (wb4 <= 0.65x int8), ``wb`` autotune key
+    segment + cache schema v6, explorer ranking packed problems through
+    the generic registry;
+  * int8-KV scale-shape validation in ``ops.attention``;
+  * ``cfg.packed_weights`` model routing and Engine warm coverage.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, cost_model, explorer, quant
+from repro.core.dataflow import (
+    ConvProblem, DataflowSpec, GemmProblem, IS, OS, WS,
+)
+from repro.kernels import ops, pack, ref
+
+BITS = (4, 5)
+
+
+def _mk_codes(rng, k, n, bits, n_outliers):
+    """MSR-structured int8 codes: in-range rows + deliberate outliers."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    q = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int8)
+    rows = rng.choice(k, size=n_outliers, replace=False) if n_outliers else []
+    for r in rows:
+        q[r] = rng.integers(-120, 121, size=n).astype(np.int8)
+    return jnp.asarray(q), np.asarray(rows)
+
+
+def _mk_scale(rng, n):
+    return jnp.asarray((rng.random((1, n)) + 0.5) / 127.0, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Shared symmetric int8 quant (core/quant.py).
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(min_value=-1e4, max_value=1e4), min_size=1,
+                max_size=32))
+def test_quant_roundtrip_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = quant.symmetric_int8(x)
+    assert q.dtype == jnp.int8 and float(scale) > 0
+    err = jnp.max(jnp.abs(x - q.astype(jnp.float32) * scale))
+    assert float(err) <= float(scale) / 2 + 1e-6
+
+
+def test_quant_zero_input_exact():
+    for axis in (None, -1):
+        q, scale = quant.symmetric_int8(jnp.zeros((3, 5)), axis=axis)
+        assert not q.any()
+        assert jnp.all(scale == 1.0)          # dequantization is exact
+        assert jnp.all(quant.dequantize(q, scale) == 0.0)
+
+
+def test_quant_single_source_of_truth():
+    """The three former private copies all route through core.quant."""
+    from repro.models import layers
+    from repro.optim import compress
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 4, 8), jnp.bfloat16)
+    for got, want in (
+        (ref.quantize_int8(x, axis=-1), quant.symmetric_int8(x, axis=-1)),
+        (compress.quantize_grad(x), quant.symmetric_int8(x)),
+        (layers._quantize_kv(x), quant.symmetric_int8(x, axis=-1)),
+    ):
+        assert jnp.array_equal(got[0], want[0])
+        assert jnp.array_equal(got[1], want[1])
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack losslessness.
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=70),
+       st.integers(min_value=1, max_value=12),
+       st.sampled_from(BITS),
+       st.integers(min_value=0, max_value=3))
+def test_pack_unpack_lossless(k, n, bits, n_out):
+    rng = np.random.default_rng(k * 1000 + n * 10 + bits + n_out)
+    n_out = min(n_out, k)
+    q, rows = _mk_codes(rng, k, n, bits, n_out)
+    pw = pack.pack_int8(q, _mk_scale(rng, n), bits=bits)
+    got, _ = pack.unpack_weights(pw)
+    assert jnp.array_equal(got, q)            # exact, outliers included
+    # the planes alone reconstruct the truncated codes
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    assert jnp.array_equal(pack.unpack_codes(pw),
+                           jnp.clip(q, lo, hi).astype(jnp.int8))
+
+
+def test_outlier_rows_reconstruct_exactly():
+    rng = np.random.default_rng(7)
+    q, rows = _mk_codes(rng, 64, 16, 4, 3)
+    pw = pack.pack_int8(q, _mk_scale(rng, 16), bits=4)
+    assert pw.outlier_idx.shape[0] >= len(rows)
+    got, _ = pack.unpack_weights(pw)
+    for r in rows:
+        assert jnp.array_equal(got[r], q[r])
+    # sentinel slots (idx == k_pad) never corrupt real rows
+    assert jnp.all((pw.outlier_idx <= pw.k_pad))
+
+
+def test_pack_roundtrip_quantization_bound():
+    w = jax.random.normal(jax.random.PRNGKey(3), (40, 12))
+    for bits in BITS:
+        w_hat = ref.pack_roundtrip(w, bits=bits)
+        pw = pack.pack_weights(w, bits=bits)
+        err = jnp.abs(w - w_hat)
+        assert float(jnp.max(err - pw.scale / 2)) <= 1e-6
+
+
+def test_traced_fixed_capacity_matches_concrete():
+    rng = np.random.default_rng(11)
+    q, _ = _mk_codes(rng, 48, 8, 4, 2)
+    scale = _mk_scale(rng, 8)
+    cap = 4                                   # room beyond the 2 hot rows
+    eager = pack.pack_int8(q, scale, bits=4, max_outliers=cap)
+    traced = jax.jit(
+        lambda qq, ss: pack.pack_int8(qq, ss, bits=4, max_outliers=cap)
+    )(q, scale)
+    assert jnp.array_equal(pack.unpack_weights(eager)[0],
+                           pack.unpack_weights(traced)[0])
+    # concrete overflow is a loud error, not silent truncation
+    hot = jnp.full((48, 8), 100, jnp.int8)    # every row an outlier
+    with pytest.raises(ValueError, match="outlier"):
+        pack.pack_int8(hot, scale, bits=4, max_outliers=1)
+
+
+def test_packed_weights_is_vmap_safe_pytree():
+    def make(key):
+        q = jax.random.randint(key, (32, 8), -8, 8, jnp.int32).astype(
+            jnp.int8)
+        return pack.pack_int8(q, jnp.full((1, 8), 0.01, jnp.float32),
+                              bits=4, max_outliers=pack.outlier_capacity(32))
+
+    stacked = jax.vmap(make)(jax.random.split(jax.random.PRNGKey(0), 3))
+    assert stacked.codes.shape == (3, 4, 8)
+    sliced = jax.tree.map(lambda a: a[1], stacked)
+    assert sliced.codes.shape == (4, 8) and sliced.bits == 4
+
+
+# ---------------------------------------------------------------------------
+# Kernel bit-exactness vs the dequantize-then-matmul oracles.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("anchor", [OS, WS, IS])
+def test_matmul_packed_bitexact(anchor, bits):
+    rng = np.random.default_rng(42 + bits)
+    m, k, n = 24, 96, 80
+    q, _ = _mk_codes(rng, k, n, bits, 3)
+    pw = pack.pack_int8(q, _mk_scale(rng, n), bits=bits)
+    assert int(jnp.sum(pw.outlier_idx < pw.k_pad)) >= 3   # sidecar active
+    aq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    a_scale = jnp.float32(0.013)
+    want = ref.matmul_packed_ref(aq, pw, a_scale=a_scale)
+    got = ops.matmul_packed(
+        aq, pw, a_scale=a_scale,
+        spec=DataflowSpec.basic(anchor, block=(32, 32, 32)),
+        backend="interpret")
+    assert jnp.array_equal(got, want)         # BIT-exact, not allclose
+
+
+def test_matmul_packed_fused_epilogue():
+    rng = np.random.default_rng(5)
+    m, k, n = 16, 64, 48
+    q, _ = _mk_codes(rng, k, n, 4, 2)
+    pw = pack.pack_int8(q, _mk_scale(rng, n), bits=4)
+    aq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    bias = jnp.asarray(rng.random(n), jnp.float32)
+    resid = jnp.asarray(rng.random((m, n)), jnp.float32)
+    kw = dict(a_scale=jnp.float32(0.02), bias=bias, residual=resid,
+              activation="silu")
+    want = ref.matmul_packed_ref(aq, pw, **kw)
+    spec = DataflowSpec.basic(WS, block=(16, 32, 16))
+
+    def call(x):
+        return ops.matmul_packed_fused(x, pw, spec=spec,
+                                       backend="interpret", **kw)
+
+    assert jnp.allclose(call(aq), want, atol=1e-5)
+    # one kernel dispatch: decompress + comp + epilogue all in-register
+    from repro.core.jaxpr_utils import count_pallas_calls
+    assert count_pallas_calls(jax.make_jaxpr(call)(aq).jaxpr) == 1
+
+
+def test_matmul_packed_validation():
+    rng = np.random.default_rng(6)
+    q, _ = _mk_codes(rng, 32, 8, 4, 0)
+    pw = pack.pack_int8(q, _mk_scale(rng, 8), bits=4)
+    aq = jnp.zeros((4, 16), jnp.int8)         # K mismatch
+    with pytest.raises(ValueError, match="K"):
+        ops.matmul_packed(aq, pw, backend="interpret")
+    from repro.kernels import matmul_df
+    with pytest.raises(ValueError, match="fused epilogue"):
+        matmul_df.matmul_df(
+            jnp.zeros((32, 32), jnp.int8), pw.codes,
+            DataflowSpec.basic(OS, block=(32, 32, 8)),
+            weight_bits=4, comp=jnp.zeros((32, 8), jnp.int32))
+
+
+@pytest.mark.parametrize("anchor,bits",
+                         [(OS, 4), (WS, 4), (IS, 4), (WS, 5)])
+def test_conv2d_packed_bitexact(anchor, bits):
+    rng = np.random.default_rng(13 + bits)
+    n_b, ih, iw, cin, cout, fh = 1, 6, 6, 32, 16, 2
+    w = rng.normal(size=(fh, fh, cin, cout)).astype(np.float32)
+    w[0, 1, 3, :] *= 30.0                     # force outlier rows
+    pcw = pack.pack_conv_weights(jnp.asarray(w), bits=bits)
+    assert int(jnp.sum(pcw.outlier_idx
+                       < pcw.fh * pcw.fw * pcw.cin_pad)) >= 1
+    xq = jnp.asarray(rng.integers(-127, 128, size=(n_b, ih, iw, cin)),
+                     jnp.int8)
+    x_scale = jnp.float32(0.02)
+    want = ref.conv2d_packed_ref(xq, pcw, 1, x_scale=x_scale)
+    got = ops.conv2d_packed(xq, pcw, stride=1, x_scale=x_scale,
+                            spec=DataflowSpec.basic(anchor),
+                            backend="interpret")
+    assert jnp.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Cost model, explorer and autotune keys.
+# ---------------------------------------------------------------------------
+def test_packed_weight_bytes_formula():
+    k, n = 2048, 2048
+    nib = -(-k // 8) * n * 4
+    hi = -(-k // 32) * n * 4
+    side = -(-3 * k // 256) * (4 + n * 4)
+    assert cost_model.packed_weight_bytes(k, n, 4) == nib + side
+    assert cost_model.packed_weight_bytes(k, n, 5) == nib + hi + side
+    assert cost_model.packed_outlier_capacity(k) == pack.outlier_capacity(k)
+
+
+def test_packed_traffic_under_int8_cap():
+    p8 = GemmProblem(m=256, k=2048, n=2048, in_dtype="int8",
+                     out_dtype="int32")
+    p4 = dataclasses.replace(p8, weight_bits=4)
+    b8, b4 = cost_model.weight_stream_bytes(p8), \
+        cost_model.weight_stream_bytes(p4)
+    assert b8 == 2048 * 2048                  # plain: k * n * itemsize
+    assert b4 / b8 <= 0.65                    # the CI-gated claim
+    for anchor in (OS, WS, IS):
+        spec = DataflowSpec.basic(anchor)
+        t8 = cost_model.gemm_traffic(p8, spec)
+        t4 = cost_model.gemm_traffic(p4, spec)
+        assert t4.total < t8.total            # packed strictly cheaper
+        assert t4.feasible
+
+
+def test_conv_problem_carries_weight_bits():
+    cv = ConvProblem(ih=14, iw=14, fh=3, fw=3, s=1, cin=128, cout=128,
+                     weight_bits=5)
+    g = cv.as_gemm()
+    assert g.weight_bits == 5
+    assert cost_model.weight_stream_bytes(g) \
+        == cost_model.packed_weight_bytes(g.k, g.n, 5)
+    with pytest.raises(ValueError, match="weight_bits"):
+        GemmProblem(m=8, k=8, n=8, weight_bits=3)
+
+
+def test_autotune_keys_versioned_with_packing_segment():
+    assert autotune.CACHE_VERSION == 6
+    p8 = GemmProblem(m=256, k=512, n=512, in_dtype="int8",
+                     out_dtype="float32", acc_dtype="int32")
+    p4 = dataclasses.replace(p8, weight_bits=4)
+    hw = cost_model.V5E
+    k8 = autotune._key(p8, hw, "interpret")
+    k4 = autotune._key(p4, hw, "interpret")
+    assert k8 != k4
+    assert k8.startswith("v6|gemm|") and "|wb-|" in k8
+    assert "|wb4|" in k4
+    cv = ConvProblem(ih=8, iw=8, fh=3, fw=3, s=1, cin=128, cout=128,
+                     weight_bits=4)
+    assert "|wb4|" in autotune._key(cv, hw, "interpret")
+
+
+def test_explorer_ranks_packed_through_generic_registry():
+    """Packed problems flow through the same ProblemRegistration rows as
+    plain ones — no per-kind branches — and the ranking reflects the
+    packed weight stream (WS traffic strictly drops)."""
+    p4 = GemmProblem(m=256, k=1024, n=1024, in_dtype="int8",
+                     out_dtype="float32", acc_dtype="int32", weight_bits=4)
+    spec = explorer.best_spec(p4)
+    assert isinstance(spec, DataflowSpec)
+    ranked = explorer.explore(p4, top=3)
+    assert ranked and all(c.feasible for c in ranked)
+    assert all(
+        cost_model.gemm_traffic(p4, c.spec).feasible for c in ranked)
+
+
+# ---------------------------------------------------------------------------
+# int8-KV scale shape validation (ops.attention).
+# ---------------------------------------------------------------------------
+def test_attention_rejects_malformed_kv_scales():
+    b, h, s, d = 1, 2, 8, 16
+    q = jnp.zeros((b, h, s, d), jnp.float32)
+    kq = jnp.zeros((b, h, s, d), jnp.int8)
+    good = jnp.ones((b, h, s, 1), jnp.float32)
+    with pytest.raises(ValueError, match="per-position"):
+        ops.attention(q, kq, kq, k_scale=None, v_scale=None)
+    for bad in (jnp.ones((b, h, s), jnp.float32),      # squeezed lane
+                jnp.ones((), jnp.float32),             # per-tensor
+                jnp.ones((b, h, 1, 1), jnp.float32)):  # per-head
+        with pytest.raises(ValueError, match="trailing"):
+            ops.attention(q, kq, kq, k_scale=bad, v_scale=good)
+        with pytest.raises(ValueError, match="trailing"):
+            ops.attention(q, kq, kq, k_scale=good, v_scale=bad)
+    # well-shaped scales pass validation and run
+    out = ops.attention(q, kq, kq, k_scale=good, v_scale=good,
+                        backend="xla")
+    assert out.shape == q.shape
+
+
+# ---------------------------------------------------------------------------
+# Model routing + Engine warm coverage.
+# ---------------------------------------------------------------------------
+def _packed_cfg(**kw):
+    from repro.configs.base import ArchConfig
+
+    return ArchConfig(name="packed-smoke", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, d_head=32, packed_weights=True, **kw)
+
+
+def test_packed_mlp_routes_through_model():
+    from repro.models import layers, lm
+
+    cfg = _packed_cfg()
+    lp = lm._init_layer(jax.random.PRNGKey(0), cfg)
+    assert isinstance(lp["mlp"]["w1"], pack.PackedWeights)
+    assert lp["mlp"]["w2"].bits == 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64), jnp.bfloat16)
+    out = layers.mlp_apply(lp["mlp"], x, cfg)
+    want = layers.packed_mlp_apply(lp["mlp"], x).astype(x.dtype)
+    assert out.dtype == x.dtype
+    assert jnp.array_equal(out, want)
+    # stacked per-layer params survive vmap init + scan-style slicing
+    params = lm.init_model(cfg, jax.random.PRNGKey(2))
+    assert params["layers"]["mlp"]["w1"].codes.shape[0] == cfg.n_layers
+    logits = lm.forward(params, jnp.zeros((1, 4), jnp.int32), cfg)
+    logits = logits[0] if isinstance(logits, tuple) else logits
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_hot_gemm_problems_packed_rows():
+    from repro.models import lm
+
+    cfg = _packed_cfg()
+    probs = lm.hot_gemm_problems(cfg, 2, 16)
+    assert len(probs) == 2
+    assert all(p.weight_bits == 4 and p.in_dtype == "int8"
+               and p.acc_dtype == "int32" for p in probs)
+    autotune.clear(disk=True)
+    autotune.reset_stats()
+    specs = autotune.warm(probs, backend="interpret")
+    assert len(specs) == 2
+    assert autotune.stats()["misses"] == 2
+
+
+def test_engine_prewarms_packed_decode_shapes(monkeypatch):
+    from repro.models import lm
+    from repro.serve.engine import Engine
+
+    cfg = _packed_cfg(use_pallas_kernels=True)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=32)
+    captured = []
+    monkeypatch.setattr(autotune, "warm",
+                        lambda probs, **kw: captured.extend(probs) or [])
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    eng._warm_autotune(2, 16)
+    packed = [p for p in captured
+              if getattr(p, "weight_bits", None) == cfg.packed_weight_bits]
+    # prefill (t = 2*16) AND the decode step (t = 2*1) are both warmed
+    ms = {p.m for p in packed}
+    assert {32, 2} <= ms
+    assert {(p.k, p.n) for p in packed} \
+        == {(cfg.d_model, cfg.d_ff), (cfg.d_ff, cfg.d_model)}
