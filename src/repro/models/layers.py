@@ -434,6 +434,74 @@ def attention_apply(
     return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache
 
 
+def paged_attention_apply(
+    p: Params,
+    x: jax.Array,                 # (B, 1, D_model) decode activations
+    cfg,
+    *,
+    positions: jax.Array,         # (B, 1) absolute position of this token
+    window: Optional[int],        # static-only (kernel grid parameter)
+    k_pages: jax.Array,           # (Hkv, n_pages, page, Dh) one layer's pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,      # (B, max_pages) int32 page ids
+    kv_lens: jax.Array,           # (B,) int32 filled KV length (pre-write)
+    write_pids: jax.Array,        # (B,) int32 page receiving this step's KV
+    write_offs: jax.Array,        # (B,) int32 offset within that page
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """GQA decode attention straight off a paged KV pool (PR-10 tentpole).
+
+    The decode twin of ``attention_apply``'s cached branch with the
+    contiguous ``(B, max_len)`` cache strip replaced by block-table
+    indirection into the shared page pool: the fresh K/V is scattered to
+    ``(write_pids, write_offs)`` (idle batch rows point at the pool's
+    scratch page) and attention runs through ``kernels.ops.
+    paged_attention`` over each row's ``block_tables`` row with a
+    ``kv_lens + 1`` band.  Projections, qk-norm, RoPE and the output
+    projection are byte-for-byte the same graph as ``attention_apply``,
+    and the gathered XLA fallback reproduces the contiguous decode
+    band exactly — so paged and slot decode emit bit-identical logits.
+
+    Returns ``(out, (k_pages, v_pages))`` with the updated pools.
+    """
+    from repro.runtime import health
+
+    fault = health.maybe_inject("layers.attention")
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None], cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+
+    # scatter this step's K/V into each row's (page, offset) slot
+    k_new = k[:, :, 0].astype(k_pages.dtype).transpose(1, 0, 2)  # (Hkv, B, Dh)
+    v_new = v[:, :, 0].astype(v_pages.dtype).transpose(1, 0, 2)
+    k_pages = k_pages.at[:, write_pids, write_offs].set(k_new)
+    v_pages = v_pages.at[:, write_pids, write_offs].set(v_new)
+
+    scale = dh ** -0.5
+    if backend is None:
+        backend = _BACKEND_OVERRIDE or (
+            "pallas" if cfg.use_pallas_kernels
+            and jax.default_backend() == "tpu" else "xla")
+    from repro.kernels import ops as kops
+
+    out = kops.paged_attention(
+        q, k_pages, v_pages, block_tables, kv_lens + 1,
+        scale=scale, window=window, backend=backend,
+    )
+    if fault == "nan":
+        out = out * jnp.asarray(jnp.nan, out.dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"]), (k_pages, v_pages)
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP.
 # ---------------------------------------------------------------------------

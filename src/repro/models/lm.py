@@ -675,6 +675,88 @@ def decode_step(
     return logits, cache
 
 
+def supports_paged_decode(cfg) -> bool:
+    """Can ``paged_decode_step`` drive this config's decode?
+
+    The paged datapath covers the pure-attention decoder stack (dense
+    or MoE FFN, uniform static or no sliding window).  SSM state,
+    encoder-decoder cross caches, int8 KV scales, and per-layer traced
+    window schedules still decode through the contiguous slot cache.
+    """
+    return bool(
+        cfg.has_attention
+        and not cfg.has_ssm
+        and not cfg.is_encoder_decoder
+        and cfg.kv_cache_dtype in ("auto", None)
+        and (cfg.attn_window is None or cfg.full_attn_every == 0)
+    )
+
+
+def paged_decode_step(
+    params: Params,
+    k_pages: jax.Array,           # (L, Hkv, n_pages, page, Dh) page pools
+    v_pages: jax.Array,
+    tokens: jax.Array,            # (B, 1)
+    block_tables: jax.Array,      # (B, max_pages) int32
+    kv_lens: jax.Array,           # (B,) int32 filled length per row
+    write_pids: jax.Array,        # (B,) int32 destination page per row
+    write_offs: jax.Array,        # (B,) int32 offset within that page
+    cfg,
+    unroll: int = 1,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step straight off the paged KV pool (PR-10 tentpole).
+
+    The paged twin of ``decode_step``: the same embed → scan(layer) →
+    final-norm → unembed graph, with each layer's attention routed
+    through ``layers.paged_attention_apply`` over that layer's slice of
+    the shared page pools instead of the per-slot cache strip.  Idle
+    batch rows scatter their writes to the pool's scratch page (the
+    scheduler points ``write_pids`` there) and their logits are
+    discarded host-side.  Returns ``(logits (B, V), (k_pages,
+    v_pages))`` — the scheduler commits the pools on step success,
+    mirroring the slot path's reject-on-failure cache contract.
+    """
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    positions = kv_lens[:, None]                           # (B, 1) ragged
+    static_window = None
+    if cfg.attn_window is not None and cfg.full_attn_every == 0:
+        static_window = int(cfg.attn_window)
+
+    def body(x, scanned):
+        lp = scanned["lp"]
+        h = layers.rmsnorm({"scale": lp["ln1"]}, x, cfg.norm_eps)
+        mix = jnp.zeros_like(x)
+        n_paths = 0
+        attn_out, (kp, vp) = layers.paged_attention_apply(
+            lp["attn"], h, cfg, positions=positions, window=static_window,
+            k_pages=scanned["k"], v_pages=scanned["v"],
+            block_tables=block_tables, kv_lens=kv_lens,
+            write_pids=write_pids, write_offs=write_offs,
+        )
+        mix = mix + attn_out
+        n_paths += 1
+        x = x + mix / max(n_paths, 1)
+        if cfg.n_experts:
+            h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
+            y, _ = moe_lib.moe_apply(lp["moe"], h2, cfg)
+            x = x + y
+        elif "mlp" in lp:
+            h2 = layers.rmsnorm({"scale": lp["ln2"]}, x, cfg.norm_eps)
+            x = x + layers.mlp_apply(lp["mlp"], h2, cfg)
+        return x, {"k": kp, "v": vp}
+
+    scanned = {"lp": params["layers"], "k": k_pages, "v": v_pages}
+    x, new_pools = jax.lax.scan(body, x, scanned, unroll=unroll)
+
+    x = layers.rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x[:, -1])
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -jnp.inf)
+    return logits, (new_pools["k"], new_pools["v"])
+
+
 def prefill(
     params: Params, tokens: jax.Array, cfg,
     max_len: Optional[int] = None,

@@ -68,6 +68,8 @@ INJECTION_SITES: List[str] = [
     "layers.attention",
     "layers.mlp",
     "train.step",
+    "pool.alloc",
+    "pool.spill",
 ]
 
 

@@ -78,6 +78,28 @@ Continuous batching (PR 8) lifts the equal-prompt-length restriction:
     scheduler — admission order, slot assignment and the fixed-shape
     ragged cache are all deterministic, so recovered greedy streams
     stay bit-identical (the ragged crash drill pins this).
+
+Memory-pressure resilience (PR 10) makes the page pool the continuous
+path's real decode datapath and makes it pressure-proof:
+
+  * for paged-decode-capable configs the scheduler routes every decode
+    step through ``ops.paged_attention`` off the block tables — no
+    contiguous slot cache — so pool occupancy is the true capacity
+    signal, and ``submit()`` additionally rejects requests whose KV
+    reach cannot fit the pool at all (``AdmissionError``);
+  * under pressure the scheduler runs an explicit ladder — watermark
+    admission backpressure (queued-with-reason via
+    ``Request.queue_reason``, never silent), host spill of the coldest
+    request's pages (``PagedKVCache.spill``/``unspill``, shared prefix
+    pages stay pinned), then preemption of the youngest request
+    (fsync'd ``preempt`` journal record, deterministic
+    recompute-on-resume verified by ``replay_divergence``);
+  * ``stats()`` surfaces ``spills`` / ``spilled_pages`` / ``unspills``
+    / ``preemptions`` / ``backpressure`` counters plus the scheduler's
+    pool report (occupancy, watermark state), and the ``pool.alloc`` /
+    ``pool.spill`` fault sites make the whole ladder drillable —
+    including SIGKILL mid-spill, which recovers via the PR-7 journal
+    with zero lost or duplicated requests.
 """
 from __future__ import annotations
 
@@ -98,8 +120,10 @@ from repro.core import autotune, cost_model, explorer
 from repro.models import layers, lm
 from repro.runtime import elastic, health
 from repro.serve import journal as journal_lib
+from repro.serve.paged_cache import pages_for
 from repro.serve.scheduler import (ContinuousScheduler, SamplingParams,
-                                   SchedulerConfig)
+                                   SchedulerConfig, paged_decode_enabled,
+                                   pool_capacity)
 
 health.register_site("snapshot.save")
 health.register_site("engine.restore")
@@ -174,6 +198,8 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
     degraded_steps: int = 0       # decode steps served on the XLA path
+    queue_reason: Optional[str] = None   # why a QUEUED request is waiting
+    #                                      (watermark / pool backpressure)
 
 
 @dataclasses.dataclass
@@ -301,6 +327,8 @@ class Engine:
             "snapshots_saved": 0, "snapshot_errors": 0,
             "recovered": 0, "replayed_steps": 0,
             "replay_divergence": 0, "restore_fallbacks": 0,
+            "spills": 0, "spilled_pages": 0, "unspills": 0,
+            "preemptions": 0, "backpressure": 0,
         }
 
     # ------------------------------------------------------------------
@@ -384,6 +412,16 @@ class Engine:
                 f"{plen} / kv reach {reach} (max_len={self.max_len}) on "
                 f"{self.hw.name} ({self.hw.vmem_bytes} bytes VMEM)",
                 AdmissionError)
+        if paged_decode_enabled(self.cfg, self.scheduler_config,
+                                self.max_len):
+            sc = self.scheduler_config or SchedulerConfig()
+            need = pages_for(reach, sc.page_size)
+            cap = pool_capacity(sc, self.max_len)
+            if need > cap:
+                self._reject(
+                    f"page pool cannot hold request: kv reach {reach} "
+                    f"needs {need} pages of {sc.page_size}, pool "
+                    f"capacity is {cap} pages", AdmissionError)
         budget = min(max_new_tokens, self.max_len - plen)
         if budget < max_new_tokens:
             self._counters["budget_clamped"] += 1
@@ -407,6 +445,20 @@ class Engine:
                 prompt=[int(t) for t in req.prompt],
                 max_new_tokens=req.max_new_tokens,
                 deadline_s=req.deadline_s)
+        sched = self._scheduler
+        if (sched is not None and sched.use_paged
+                and sched.paged.above_high()):
+            # backpressure is queued-with-reason, never a silent drop:
+            # the request is admitted and durable, but the caller can
+            # see it will wait for the pool to drain below the
+            # watermark before it is scheduled
+            req.queue_reason = (
+                f"pool above high watermark (occupancy "
+                f"{sched.paged.occupancy():.2f})")
+            self._counters["backpressure"] += 1
+            self.monitor.note("backpressure", site="serve.submit",
+                              detail=f"rid {req.rid}: "
+                                     f"{req.queue_reason}")
         return req
 
     # ------------------------------------------------------------------
@@ -1014,6 +1066,9 @@ class Engine:
         out["demoted_now"] = self.policy.demoted
         out["probes"] = self.policy.probes
         out["health"] = self.monitor.report()
+        sched = self.scheduler_report()
+        if sched is not None:
+            out["scheduler"] = sched
         if self.journal is not None:
             out["journal"] = self.journal.stats()
         if self.snapshots is not None:

@@ -18,6 +18,10 @@ replays in-flight requests to their exact decode position
               *not* recomputable)
     snapshot  step — marks that ``Engine.snapshot`` committed a
               checkpoint covering everything before it
+    preempt   rid, step, tokens_done — memory-pressure preemption
+              (fsync'd): the request's pages were released and it was
+              re-queued; its journaled tokens stay as replay
+              expectations for the deterministic recompute
     done / failed / evicted
               rid, step, error — terminal transitions, fsync'd
 
@@ -200,6 +204,14 @@ def replay_table(records: List[dict]) -> Dict[int, Dict[str, Any]]:
                 elif pos == len(toks) + 1:
                     toks.append(int(rec["token"]))
                 row["state"] = "decoding"
+        elif kind == "preempt" and rid in table:
+            # memory-pressure preemption (PR 10): the request went back
+            # to the queue with its pages released.  Journaled tokens
+            # are kept — recompute-on-resume is deterministic, so they
+            # become position-addressed replay expectations that the
+            # regenerated run must reproduce bit-exactly.
+            if table[rid]["state"] in ("queued", "decoding"):
+                table[rid]["state"] = "queued"
         elif kind in ("done", "failed", "evicted") and rid in table:
             table[rid]["state"] = kind
             table[rid]["error"] = rec.get("error")

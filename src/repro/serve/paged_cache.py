@@ -26,16 +26,39 @@ chain key includes the parent, so a chunk match at position k implies
 the *entire* prefix up to k matched — no false sharing between prompts
 that agree on one middle chunk only.
 
+Memory pressure (the PR-10 tentpole) adds a second tier below the
+device pool: ``spill(pages)`` moves a cold request's private pages to
+per-page host numpy buffers and returns the device copies to the free
+list; ``unspill(entries)`` round-trips them back bit-exactly.  Shared
+prefix pages (refcount > 1) are never copied — the spilling request
+keeps its reference and the entry records the still-resident page id,
+so a later ``unspill`` rebuilds the exact page list without touching
+them.  High/low watermarks over pool occupancy give the scheduler a
+hysteresis band: admission defers above ``high_watermark`` and spilled
+requests resume below ``low_watermark``.
+
 Bookkeeping (free list, refcounts, prefix chain) is host-side and O(1)
 per page; only the page payload lives on device.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime import health
+
+# Pressure drills: pool.alloc fires inside alloc() — a `raise` kind is
+# absorbed as a simulated OOM (alloc returns None), driving the
+# spill -> preempt -> backpressure ladder without real exhaustion.
+# pool.spill fires at the top of spill(); its `kill` kind is the
+# SIGKILL-mid-spill crash drill (spill never touches the journal, so
+# cold replay re-prefills and nothing is lost or duplicated).
+health.register_site("pool.alloc")
+health.register_site("pool.spill")
 
 
 def pages_for(seq: int, page_size: int) -> int:
@@ -43,29 +66,40 @@ def pages_for(seq: int, page_size: int) -> int:
     return max(0, -(-int(seq) // int(page_size)))
 
 
+def _strict_pool() -> bool:
+    return os.environ.get("REPRO_STRICT_POOL", "0") not in ("", "0")
+
+
 class PagedKVCache:
     """Refcounted page pool with prefix reuse for one model config.
 
     ``cfg`` needs ``n_layers`` / ``n_kv_heads`` / ``d_head`` (any
     attention ModelConfig).  The pool is allocated eagerly: K and V
-    pools of shape ``(n_layers, n_kv_heads, n_pages, page_size,
+    pools of shape ``(n_layers, n_kv_heads, n_pages + 1, page_size,
     d_head)`` — the page axis is shared by every layer, so one page id
     resolves the same positions in all layers and the per-request block
-    table stays a flat ``(max_pages,)`` int row.
+    table stays a flat ``(max_pages,)`` int row.  The extra page at
+    index ``n_pages`` is the *scratch* page: paged decode scatters
+    inactive batch rows' writes there, so it is never allocated, never
+    referenced by a block table, and never read.
     """
 
     def __init__(self, cfg, n_pages: int, page_size: int = 16,
-                 dtype="bfloat16"):
+                 dtype="bfloat16", high_watermark: float = 0.90,
+                 low_watermark: float = 0.60):
         if n_pages < 1:
             raise ValueError(f"need at least one page, got {n_pages}")
         kv_dt = jnp.dtype(dtype if getattr(cfg, "kv_cache_dtype", "auto")
                           in ("auto", None) else cfg.kv_cache_dtype)
-        shape = (cfg.n_layers, cfg.n_kv_heads, n_pages, page_size,
+        shape = (cfg.n_layers, cfg.n_kv_heads, n_pages + 1, page_size,
                  cfg.d_head)
         self.k_pages = jnp.zeros(shape, kv_dt)
         self.v_pages = jnp.zeros(shape, kv_dt)
         self.page_size = int(page_size)
         self.n_pages = int(n_pages)
+        self.scratch = int(n_pages)          # write sink for idle rows
+        self.high_watermark = float(high_watermark)
+        self.low_watermark = float(low_watermark)
         self.refs = np.zeros(n_pages, np.int32)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         # prefix chain: (parent_key, token_chunk) -> page id, and the
@@ -74,7 +108,8 @@ class PagedKVCache:
         self._page_key: Dict[int, Tuple] = {}
         self.stats: Dict[str, int] = {
             "allocs": 0, "frees": 0, "reuse_hits": 0, "reuse_pages": 0,
-            "oom_rejects": 0,
+            "oom_rejects": 0, "ref_underflows": 0,
+            "spills": 0, "spilled_pages": 0, "unspills": 0,
         }
 
     # ------------------------------------------------------------------
@@ -89,10 +124,27 @@ class PagedKVCache:
         any prefix sharing it might get)?"""
         return pages_for(seq, self.page_size) <= len(self._free)
 
+    def occupancy(self) -> float:
+        """Fraction of the pool currently allocated (0.0 .. 1.0)."""
+        return 1.0 - len(self._free) / self.n_pages
+
+    def above_high(self) -> bool:
+        return self.occupancy() >= self.high_watermark
+
+    def below_low(self) -> bool:
+        return self.occupancy() <= self.low_watermark
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """Take ``n`` fresh pages (ref=1 each), or None if the pool
-        cannot satisfy the request — the caller falls back to the
-        contiguous cache, it does not partially allocate."""
+        cannot satisfy the request — the caller runs the pressure
+        ladder (spill / preempt / defer), it does not partially
+        allocate.  A ``pool.alloc`` raise-fault is absorbed as a
+        simulated OOM so the ladder is drillable on a roomy pool."""
+        try:
+            health.maybe_inject("pool.alloc")
+        except health.SimulatedFailure:
+            self.stats["oom_rejects"] += 1
+            return None
         if n > len(self._free):
             self.stats["oom_rejects"] += 1
             return None
@@ -104,16 +156,102 @@ class PagedKVCache:
 
     def release(self, pages: Sequence[int]) -> None:
         """Drop one reference per page; refcount 0 returns the page to
-        the free list and retires its prefix-chain entry."""
+        the free list and retires its prefix-chain entry.  Releasing a
+        page that is already free is a double-free: counted in
+        ``ref_underflows`` (and fatal under ``REPRO_STRICT_POOL=1``)
+        instead of silently clamping, because an underflow means some
+        *other* request's shared prefix page just got freed under it."""
         for pid in pages:
-            self.refs[pid] -= 1
             if self.refs[pid] <= 0:
-                self.refs[pid] = 0
+                self.stats["ref_underflows"] += 1
+                if _strict_pool():
+                    raise RuntimeError(
+                        f"page {pid} released with refcount "
+                        f"{int(self.refs[pid])} (double free)")
+                continue
+            self.refs[pid] -= 1
+            if self.refs[pid] == 0:
                 key = self._page_key.pop(pid, None)
                 if key is not None:
                     self._prefix.pop(key, None)
                 self._free.append(pid)
                 self.stats["frees"] += 1
+
+    # ------------------------------------------------------------------
+    # Host spill tier.
+    # ------------------------------------------------------------------
+    def spill(self, pages: Sequence[int]) -> List[Tuple]:
+        """Move a request's pages to host memory, freeing device pages.
+
+        Returns a list of spill entries, one per input page, in order:
+
+        - ``("host", k_np, v_np)`` — the page was private (refcount 1);
+          its payload was copied to host numpy buffers and the device
+          page was released back to the free list.
+        - ``("resident", pid)`` — the page is shared (refcount > 1), so
+          copying it would waste host memory and releasing it would
+          yank it from the other holders; the spilling request *keeps
+          its reference* (the page stays pinned on device) and the
+          entry just records the id.
+
+        Spilling is invisible to the journal: a crash mid-spill (the
+        ``pool.spill`` kill drill) recovers via cold replay, which
+        re-prefills from the journaled prompt and never needs the
+        spilled payload.
+        """
+        health.maybe_inject("pool.spill")
+        entries: List[Tuple] = []
+        n_host = 0
+        for pid in pages:
+            pid = int(pid)
+            if self.refs[pid] > 1:
+                entries.append(("resident", pid))
+                continue
+            k_np = np.asarray(self.k_pages[:, :, pid])
+            v_np = np.asarray(self.v_pages[:, :, pid])
+            entries.append(("host", k_np, v_np))
+            self.release([pid])
+            n_host += 1
+        self.stats["spills"] += 1
+        self.stats["spilled_pages"] += n_host
+        return entries
+
+    def unspill(self, entries: Sequence[Tuple]) -> Optional[List[int]]:
+        """Round-trip spilled entries back onto device pages.
+
+        Allocates one fresh page per ``("host", ...)`` entry, scatters
+        the payloads back, and returns the request's full page list in
+        original order (resident ids unchanged, host entries on their
+        new pages).  Returns None — with ``entries`` untouched and no
+        pages leaked — if the pool cannot currently hold the payload;
+        the caller retries later or escalates the ladder.
+        """
+        need = sum(1 for e in entries if e[0] == "host")
+        fresh = self.alloc(need) if need else []
+        if fresh is None:
+            return None
+        pages: List[int] = []
+        new_ids, chunks_k, chunks_v = [], [], []
+        it = iter(fresh)
+        for e in entries:
+            if e[0] == "resident":
+                pages.append(e[1])
+                continue
+            pid = next(it)
+            pages.append(pid)
+            new_ids.append(pid)
+            chunks_k.append(e[1])
+            chunks_v.append(e[2])
+        if new_ids:
+            idx = jnp.asarray(new_ids, jnp.int32)
+            self.k_pages = self.k_pages.at[:, :, idx].set(
+                jnp.asarray(np.stack(chunks_k, axis=2),
+                            self.k_pages.dtype))
+            self.v_pages = self.v_pages.at[:, :, idx].set(
+                jnp.asarray(np.stack(chunks_v, axis=2),
+                            self.v_pages.dtype))
+        self.stats["unspills"] += 1
+        return pages
 
     # ------------------------------------------------------------------
     # Prefix reuse.
@@ -227,4 +365,7 @@ class PagedKVCache:
         out["pages_total"] = self.n_pages
         out["pages_free"] = len(self._free)
         out["pages_shared"] = int(np.sum(self.refs > 1))
+        out["occupancy"] = round(self.occupancy(), 4)
+        out["above_high"] = self.above_high()
+        out["below_low"] = self.below_low()
         return out
